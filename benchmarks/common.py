@@ -1,0 +1,82 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+All benchmarks use T(app, schedule, p) = best makespan across the Table 2
+parameter grid (paper §6.1) and speedup = T(app, guided, 1) / T(app, s, p)
+(eq. 9). Nested-loop apps (BFS levels, K-Means rounds) sum per-loop
+makespans (fork-join barrier between loops), with fresh scheduler state per
+loop, and grid parameters chosen once per app (as a user would).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import policies as P
+from repro.core.simulator import SimParams, simulate
+
+THREADS = (1, 2, 4, 8, 14, 28)
+METHODS = ("guided", "dynamic", "taskloop", "binlpt", "stealing", "ich")
+PARAMS = SimParams()
+
+
+def method_grid(name: str, p: int) -> list[P.Policy]:
+    return [pol for pol in P.paper_policy_grid(p) if pol.name == name]
+
+
+def app_time(loops: list[np.ndarray], p: int, pol: P.Policy,
+             estimates: list[np.ndarray] = None,
+             params: SimParams = PARAMS) -> float:
+    """Sum of makespans over the app's parallel loops under one policy."""
+    total = 0.0
+    for i, costs in enumerate(loops):
+        est = estimates[i] if estimates is not None else None
+        total += simulate(costs, p, pol, params, estimate=est).makespan
+    return total
+
+
+def best_time(loops, p: int, method: str, estimates=None,
+              params: SimParams = PARAMS) -> float:
+    return min(app_time(loops, p, pol, estimates, params)
+               for pol in method_grid(method, p))
+
+
+def speedup_table(loops, estimates=None, threads=THREADS,
+                  methods=METHODS, params: SimParams = PARAMS):
+    """-> {method: {p: speedup}} with the paper's eq. 9 definition."""
+    t1 = best_time(loops, 1, "guided", estimates, params)
+    out = {}
+    for m in methods:
+        out[m] = {p: t1 / best_time(loops, p, m, estimates, params)
+                  for p in threads}
+    return out
+
+
+def rank_of_ich(table: dict, p: int = 28, tol: float = 0.02) -> int:
+    """1-based rank of iCh at thread count p (paper: top-3). Methods within
+    `tol` relative speedup are treated as ties (the paper's bar charts have
+    comparable noise; sub-2%% orderings are not meaningful)."""
+    ich = table["ich"][p]
+    better = sum(1 for m in table if m != "ich" and table[m][p] > ich * (1 + tol))
+    return better + 1
+
+
+def gap_to_best(table: dict, p: int = 28) -> float:
+    """(best - ich)/best at p (paper: avg ~5.4%)."""
+    best = max(table[m][p] for m in table)
+    return (best - table["ich"][p]) / best
+
+
+def csv_rows(app: str, table: dict) -> list[str]:
+    rows = []
+    for m, sp in table.items():
+        for p, v in sp.items():
+            rows.append(f"{app},{m},{p},{v:.3f}")
+    return rows
+
+
+def write_csv(path: str, header: str, rows: list[str]):
+    import pathlib
+    f = pathlib.Path(path)
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(header + "\n" + "\n".join(rows) + "\n")

@@ -1,0 +1,38 @@
+"""Core of the reproduction: the iCh adaptive self-scheduling loop scheduler
+(Booth & Lane, 2020) plus the baseline scheduler family, a discrete-event
+simulator for scheduler-quality evaluation, a real threaded executor, and the
+paper's workload generators.
+"""
+from .policies import (
+    Policy,
+    binlpt,
+    dynamic,
+    guided,
+    ich,
+    ich_chunk,
+    ich_initial_d,
+    paper_policy_grid,
+    static,
+    stealing,
+    taskloop,
+)
+from .simulator import (
+    SimParams,
+    SimResult,
+    best_time_over_grid,
+    eps_sensitivity,
+    simulate,
+    speedup,
+    worst_stealing,
+)
+from .welford import Welford, adapt_d, classify, ich_band, steal_merge, LOW, NORMAL, HIGH
+from .executor import parallel_for, ExecStats
+
+__all__ = [
+    "Policy", "binlpt", "dynamic", "guided", "ich", "ich_chunk",
+    "ich_initial_d", "paper_policy_grid", "static", "stealing", "taskloop",
+    "SimParams", "SimResult", "best_time_over_grid", "eps_sensitivity",
+    "simulate", "speedup", "worst_stealing",
+    "Welford", "adapt_d", "classify", "ich_band", "steal_merge",
+    "LOW", "NORMAL", "HIGH", "parallel_for", "ExecStats",
+]

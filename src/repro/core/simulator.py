@@ -1,0 +1,340 @@
+"""Discrete-event simulator for self-scheduling policies (paper §5-6).
+
+This container has a single CPU core while the paper evaluates on a 28-thread
+Xeon, so scheduler *quality* (makespan / speedup) is evaluated with a
+discrete-event simulator whose policy logic is bit-faithful to the paper
+(chunk laws, iCh classification/adaptation, THE-protocol steal-half with
+rollback) and whose time model captures the costs the paper discusses:
+
+* per-chunk dispatch under a queue lock (central queue => serialization,
+  which is what kills ``dynamic(1)`` at high thread counts),
+* local dispatch cost on distributed deques,
+* steal cost, failed-steal cost, and a remote (cross-socket NUMA -> in our
+  TPU adaptation cross-pod ICI) penalty multiplier,
+* per-worker speed heterogeneity (DVFS / memory-bandwidth jitter, §3.2),
+* iCh adaptation bookkeeping cost.
+
+Events are processed at chunk granularity: O(#chunks + #steals) heap ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Optional
+
+import numpy as np
+
+from . import policies as P
+from . import welford as W
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    dispatch_overhead: float = 1.0      # central-queue grab (lock held)
+    local_dispatch_overhead: float = 0.25
+    steal_overhead: float = 4.0         # successful steal (lock held)
+    failed_steal_overhead: float = 1.0  # empty-victim probe / rollback
+    adapt_overhead: float = 0.15        # iCh classification + d update
+    task_overhead: float = 3.0          # taskloop task creation/scheduling
+    remote_penalty: float = 3.0         # cross-socket steal multiplier
+    socket_size: int = 14               # threads per socket (2x14 Haswell)
+    speed_jitter: float = 0.06          # stddev of per-worker speed factor
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    n: int
+    p: int
+    policy: str
+    chunks: int = 0
+    steals: int = 0
+    failed_steals: int = 0
+    busy: float = 0.0
+    overhead: float = 0.0
+    ks: Optional[np.ndarray] = None
+    ds: Optional[np.ndarray] = None
+    assignment: Optional[np.ndarray] = None  # per-iteration worker id
+
+    @property
+    def efficiency(self) -> float:
+        return self.busy / (self.makespan * self.p) if self.makespan > 0 else 0.0
+
+
+def _speeds(p: int, params: SimParams) -> np.ndarray:
+    # One stable speed stream per seed: worker w has the same speed at every
+    # thread count, so speedups are measured against a consistent baseline.
+    rng = np.random.default_rng(params.seed)
+    s = 1.0 + params.speed_jitter * rng.standard_normal(max(p, 64))
+    return np.clip(s[:p], 0.5, None)
+
+
+def simulate(
+    costs: np.ndarray,
+    p: int,
+    policy: P.Policy,
+    params: SimParams = SimParams(),
+    record_assignment: bool = False,
+    estimate: np.ndarray = None,
+) -> SimResult:
+    """`estimate` is the workload estimate HANDED to workload-aware policies
+    (binlpt); defaults to the true costs. Passing a stale estimate models
+    K-Means-style per-round workload drift (paper §6.1)."""
+    costs = np.asarray(costs, dtype=np.float64)
+    n = len(costs)
+    csum = np.concatenate([[0.0], np.cumsum(costs)])
+    res = SimResult(0.0, n, p, policy.label())
+    if n == 0:
+        return res
+    speeds = _speeds(p, params)
+    assignment = np.full(n, -1, dtype=np.int32) if record_assignment else None
+
+    if policy.kind == P.CENTRAL:
+        est = costs if estimate is None else np.asarray(estimate, np.float64)
+        _simulate_central(costs, csum, p, policy, params, speeds, res,
+                          assignment, est)
+    else:
+        _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignment)
+    res.assignment = assignment
+    return res
+
+
+# ----------------------------------------------------------------------------
+# Central-queue family: dynamic / guided / taskloop / binlpt / static
+# ----------------------------------------------------------------------------
+
+def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
+                      estimate=None):
+    n = len(costs)
+    pretiled: Optional[list[tuple[int, int]]] = None
+    if policy.law == "pretiled":
+        pretiled = P.pretile(policy, costs if estimate is None else estimate, p)
+    grab_cost = params.task_overhead if policy.name == "taskloop" else params.dispatch_overhead
+
+    if policy.name == "binlpt":
+        # BinLPT (paper ref. 9): equal-work chunks are STATICALLY assigned to
+        # threads by LPT on the workload ESTIMATE; threads then run their own
+        # bins (no stealing). Imbalance comes from estimate staleness and
+        # worker-speed jitter — which is why the paper's binlpt falls behind
+        # on-demand methods on skewed workloads.
+        est = costs if estimate is None else estimate
+        ecsum = np.concatenate([[0.0], np.cumsum(np.asarray(est, np.float64))])
+        loads = np.zeros(p)
+        bins: list[list[tuple[int, int]]] = [[] for _ in range(p)]
+        for (b, e) in pretiled:  # already in descending-work order
+            w = int(np.argmin(loads))
+            bins[w].append((b, e))
+            loads[w] += ecsum[e] - ecsum[b]
+        makespan = 0.0
+        for w in range(p):
+            tw = 0.0
+            for (b, e) in bins[w]:
+                work = csum[e] - csum[b]
+                tw += grab_cost + work / speeds[w]
+                if assignment is not None:
+                    assignment[b:e] = w
+                res.chunks += 1
+                res.busy += work / speeds[w]
+                res.overhead += grab_cost
+            makespan = max(makespan, tw)
+        res.makespan = makespan
+        return
+
+    next_idx = 0          # next unscheduled iteration (law policies)
+    next_chunk = 0        # next chunk index (pretiled policies)
+    queue_free = 0.0      # central-queue lock availability
+    heap: list[tuple[float, int, int]] = [(0.0, w, w) for w in range(p)]
+    heapq.heapify(heap)
+    seq = p
+    makespan = 0.0
+
+    while heap:
+        t, _, w = heapq.heappop(heap)
+        makespan = max(makespan, t)
+        # request work from the central queue
+        if pretiled is not None:
+            if next_chunk >= len(pretiled):
+                continue
+            start = max(t, queue_free)
+            queue_free = start + grab_cost
+            b, e = pretiled[next_chunk]
+            next_chunk += 1
+        else:
+            if next_idx >= n:
+                continue
+            start = max(t, queue_free)
+            queue_free = start + grab_cost
+            remaining = n - next_idx
+            if policy.law == "guided":
+                chunk = P.guided_next_chunk(remaining, p, policy.chunk)
+            else:
+                chunk = min(policy.chunk, remaining)
+            b, e = next_idx, next_idx + chunk
+            next_idx = e
+        work = csum[e] - csum[b]
+        if assignment is not None:
+            assignment[b:e] = w
+        done = start + grab_cost + work / speeds[w]
+        res.chunks += 1
+        res.busy += work / speeds[w]
+        res.overhead += (start - t) + grab_cost
+        seq += 1
+        heapq.heappush(heap, (done, seq, w))
+    res.makespan = makespan
+
+
+# ----------------------------------------------------------------------------
+# Distributed-queue family: stealing / iCh (THE protocol)
+# ----------------------------------------------------------------------------
+
+def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignment):
+    n = len(costs)
+    # Even contiguous initial split (paper §3.1): |q_i| = n/p.
+    bounds = np.linspace(0, n, p + 1).astype(np.int64)
+    qbegin = bounds[:-1].astype(np.int64).copy()
+    qend = bounds[1:].astype(np.int64).copy()
+    lock_free = np.zeros(p)
+    ks = np.zeros(p)                      # completed-iteration counters k_i
+    ds = np.full(p, P.ich_initial_d(p))   # chunk divisors d_i (iCh)
+    fails = np.zeros(p, dtype=np.int64)   # consecutive failed steal attempts
+    rng = np.random.default_rng(params.seed + 104729 * p)
+
+    # events: (time, seq, worker, kind, payload) kind: 0=idle, 1=chunk-done
+    heap: list[tuple[float, int, int, int, int]] = []
+    for w in range(p):
+        heap.append((0.0, w, w, 0, 0))
+    heapq.heapify(heap)
+    seq = p
+    makespan = 0.0
+    remaining_total = n
+
+    def qlen(v: int) -> int:
+        return int(qend[v] - qbegin[v])
+
+    def push(t: float, w: int, kind: int, payload: int = 0):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, w, kind, payload))
+
+    while heap:
+        t, _, w, kind, payload = heapq.heappop(heap)
+        makespan = max(makespan, t)
+
+        if kind == 1:  # chunk completed: update bookkeeping, then go idle
+            ks[w] += payload
+            if policy.adaptive:
+                mu, delta = W.ich_band(ks, policy.eps)
+                ds[w] = W.adapt_d(ds[w], W.classify(ks[w], mu, delta))
+                res.overhead += params.adapt_overhead
+                push(t + params.adapt_overhead, w, 0)
+            else:
+                push(t, w, 0)
+            continue
+
+        # kind == 0: idle -> dispatch from own queue or steal
+        if qlen(w) > 0:
+            fails[w] = 0
+            start = max(t, lock_free[w])
+            lock_free[w] = start + params.local_dispatch_overhead
+            ql = qlen(w)
+            if policy.adaptive:
+                chunk = min(ql, P.ich_chunk(ql, ds[w]))
+            else:
+                chunk = min(ql, max(1, policy.chunk))
+            b = int(qbegin[w])
+            e = b + chunk
+            qbegin[w] = e
+            remaining_total -= chunk
+            work = csum[e] - csum[b]
+            if assignment is not None:
+                assignment[b:e] = w
+            done = start + params.local_dispatch_overhead + work / speeds[w]
+            res.chunks += 1
+            res.busy += work / speeds[w]
+            res.overhead += (start - t) + params.local_dispatch_overhead
+            push(done, w, 1, chunk)
+            continue
+
+        # Steal path (paper Listing 1, THE protocol). Victim selection is
+        # BLIND random probing (a thief cannot see queue sizes without
+        # touching the victim's cache line) — the paper's "randomly selecting
+        # from nonoptimal choices". An empty probe costs a (remote-penalized)
+        # round trip; consecutive failures back off exponentially.
+        if remaining_total <= 0:
+            continue  # nothing left anywhere: worker retires
+        v = int((w + 1 + rng.integers(p - 1)) % p) if p > 1 else w
+        remote = (w // params.socket_size) != (v // params.socket_size)
+        rmul = params.remote_penalty if remote else 1.0
+        if p == 1 or qlen(v) // 2 <= 0:
+            # empty probe: victim has <2 stealable iterations
+            res.failed_steals += 1
+            probe = params.failed_steal_overhead * rmul
+            back = params.failed_steal_overhead * float(2 ** min(fails[w], 10))
+            fails[w] += 1
+            res.overhead += probe + back
+            push(t + probe + back, w, 0)
+            continue
+        cost = params.steal_overhead * rmul
+        start = max(t, lock_free[v])
+        lock_free[v] = start + cost
+        half = qlen(v) // 2  # re-read under the lock (may have drained)
+        if half <= 0:
+            # rollback (paper Listing 1 lines 12-16)
+            res.failed_steals += 1
+            back = params.failed_steal_overhead * float(2 ** min(fails[w], 10))
+            fails[w] += 1
+            res.overhead += (start - t) + cost + back
+            push(start + cost + back, w, 0)
+            continue
+        new_end = int(qend[v]) - half
+        qend[v] = new_end
+        qbegin[w] = new_end
+        qend[w] = new_end + half
+        res.steals += 1
+        fails[w] = 0
+        res.overhead += (start - t) + cost
+        if policy.adaptive:
+            ks[w], ds[w] = W.steal_merge(ks[w], ds[w], ks[v], ds[v])
+        push(start + cost, w, 0)
+
+    res.makespan = makespan
+    res.ks = ks
+    res.ds = ds
+
+
+# ----------------------------------------------------------------------------
+# Paper metrics (§6.1 eq. 9, §6.2 eqs. 10-11)
+# ----------------------------------------------------------------------------
+
+def best_time_over_grid(
+    costs: np.ndarray, p: int, name: str, params: SimParams = SimParams()
+) -> float:
+    """T(app, schedule, p): best makespan across the Table 2 parameter grid."""
+    times = [
+        simulate(costs, p, pol, params).makespan
+        for pol in P.paper_policy_grid(p)
+        if pol.name == name
+    ]
+    return float(min(times))
+
+
+def speedup(costs: np.ndarray, p: int, name: str, params: SimParams = SimParams()) -> float:
+    """Paper eq. 9: speedup vs. guided on one thread."""
+    t1 = best_time_over_grid(costs, 1, "guided", params)
+    tp = best_time_over_grid(costs, p, name, params)
+    return t1 / tp
+
+
+def eps_sensitivity(costs: np.ndarray, p: int, params: SimParams = SimParams()) -> float:
+    """Paper eq. 10: worst/best iCh makespan over eps in {25%, 33%, 50%}."""
+    times = [simulate(costs, p, P.ich(e), params).makespan for e in (0.25, 0.33, 0.50)]
+    return float(max(times) / min(times))
+
+
+def worst_stealing(costs: np.ndarray, p: int, params: SimParams = SimParams()) -> float:
+    """Paper eq. 11: worst-eps iCh over best-chunk stealing."""
+    ich_t = max(simulate(costs, p, P.ich(e), params).makespan for e in (0.25, 0.33, 0.50))
+    st_t = min(simulate(costs, p, P.stealing(c), params).makespan for c in (1, 2, 3, 64))
+    return float(ich_t / st_t)

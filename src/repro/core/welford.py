@@ -1,0 +1,87 @@
+"""Running statistics used by iCh (paper §3.2, eqs. 4-8).
+
+The paper considers the classical Welford running mean/variance (eqs. 6-7,
+ref. [26]) but rejects keeping full running variance as too expensive for a
+lightweight loop scheduler; iCh instead estimates the deviation band as a
+fractional multiplier of the running mean (eq. 8):
+
+    delta = eps * mean(k_j)
+
+Both estimators are implemented here: `Welford` (the exact running moments,
+used by the beyond-paper MoE balancer where we can afford vectorized math and
+by tests as an oracle) and `ich_band` (the paper's cheap band).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+LOW, NORMAL, HIGH = -1, 0, 1
+
+
+@dataclasses.dataclass
+class Welford:
+    """Welford running mean/variance (paper eq. 6-7)."""
+
+    count: int = 0
+    mean: float = 0.0
+    m2: float = 0.0
+
+    def update(self, x: float) -> None:
+        self.count += 1
+        d = x - self.mean
+        self.mean += d / self.count
+        self.m2 += d * (x - self.mean)
+
+    def update_many(self, xs: Iterable[float]) -> None:
+        for x in xs:
+            self.update(x)
+
+    @property
+    def variance(self) -> float:
+        return self.m2 / self.count if self.count > 0 else 0.0
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(self.variance))
+
+
+def ich_band(ks: np.ndarray, eps: float) -> tuple[float, float]:
+    """Paper eq. 8: the (mu, delta) band from per-worker completed counts.
+
+    mu    = sum_j k_j / p   (mean iteration throughput)
+    delta = eps * mu
+    """
+    mu = float(np.sum(ks)) / len(ks)
+    return mu, eps * mu
+
+
+def classify(k_i: float, mu: float, delta: float) -> int:
+    """Paper eqs. 1-3: classify a worker's throughput against mu +- delta."""
+    if k_i < mu - delta:
+        return LOW
+    if k_i > mu + delta:
+        return HIGH
+    return NORMAL
+
+
+def adapt_d(d_i: float, cls: int, d_min: float = 1.0, d_max: float = 4096.0) -> float:
+    """Paper §3.2 adaptation of the chunk divisor d_i.
+
+    chunk = ceil(|q_i| / d_i); the *direction* is deliberately inverted vs.
+    load-balance tuning:
+      low  (slow worker)  -> d/2  -> chunk DOUBLES  (fewer interruptions)
+      high (fast worker)  -> 2d   -> chunk HALVES   (more stealable work)
+    """
+    if cls == LOW:
+        d_i = d_i / 2.0
+    elif cls == HIGH:
+        d_i = d_i * 2.0
+    return float(min(max(d_i, d_min), d_max))
+
+
+def steal_merge(k_thief: float, d_thief: float, k_victim: float, d_victim: float) -> tuple[float, float]:
+    """Paper Listing 1 lines 6-7: average thief/victim bookkeeping on steal."""
+    return (k_thief + k_victim) / 2.0, (d_thief + d_victim) / 2.0

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (causal, GQA) — forward kernel.
+
+Grid layout: (B*Hq, n_q_blocks, n_kv_blocks) with the KV dim innermost; TPU
+executes the grid sequentially in row-major order, so the online-softmax
+accumulators (m, l, acc) live in VMEM scratch and persist across the KV steps
+of one (batch-head, q-block) pair. Fully-masked causal blocks are skipped
+with pl.when — this is the term the XLA blockwise path cannot drop (it
+computes then masks), worth ~2x on attention FLOPs at long sequence.
+
+GQA is handled by the K/V index_map (q-head -> kv-head), so K/V are never
+materialized at Hq width. VMEM budget per step: q/k/v blocks 256x128
+(64-192KB) + fp32 scores 256x256 (256KB) — comfortably < 16MB VMEM; MXU dims
+are multiples of 128 when dh >= 128 (dh=64 archs pad on sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, q_block: int, kv_block: int, causal: bool,
+                  n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the causal diagonal (saved FLOPs)
+        pl.when(k_start <= q_start + q_block - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, ...] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 256,
+                    kv_block: int = 256, interpret: bool = False):
+    """q (B,Sq,Hq,dh); k,v (B,Skv,Hkv,dh), Hq % Hkv == 0. Returns (B,Sq,Hq,dh).
+    Sq / Skv must be multiples of the block sizes (callers pad)."""
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = dh ** -0.5
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0, (Sq, Skv, q_block, kv_block)
+    nq, nk = Sq // q_block, Skv // kv_block
+
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, dh)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, q_block=q_block, kv_block=kv_block,
+        causal=causal, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, dh),
+                         lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+            pl.BlockSpec((1, kv_block, dh),
+                         lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, dh).transpose(0, 2, 1, 3)

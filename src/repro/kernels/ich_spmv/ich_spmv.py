@@ -1,0 +1,118 @@
+"""iCh-scheduled segmented SpMV — the paper's technique at the kernel level.
+
+TPU adaptation (DESIGN.md §2): a TPU grid is static, so iCh's *runtime*
+chunk adaptation becomes *schedule construction*. The host packs CSR rows
+into fixed-shape work tiles (R rows x W nnz slots) where the tile width W is
+chosen by the paper's band classification over the row-nnz distribution
+(`ich_tile_width`), and rows whose nnz exceeds W are SPLIT across several
+tiles — the work-stealing analogue: no tile (chunk) can be overloaded, heavy
+rows' overflow migrates to later tiles exactly like stolen iterations.
+
+The kernel is a persistent-grid pallas_call: grid = (n_tiles,); each step
+loads its (R, W) value/column tile from HBM into VMEM, gathers x, reduces
+over W, and ACCUMULATES into the output rows (grid steps execute
+sequentially on a TPU core, so read-modify-write of the output is safe).
+x is kept whole in VMEM (fits for n <= ~1M fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+
+def ich_tile_width(row_nnz: np.ndarray, eps: float = 0.33,
+                   min_w: int = 8, max_w: int = 512) -> int:
+    """Pick the tile width with the paper's band (eqs. 1-3, 8).
+
+    W = the band's UPPER edge mu*(1+eps), rounded up to a power of two:
+    every "normal"-classified row (within mu +- eps*mu) fits in one segment;
+    only "high" rows split across tiles — the work-stealing analogue (their
+    overflow migrates to later tiles). A multiplicative walk (adapt_d per
+    chunk) has no equilibrium on a static distribution — measured in
+    benchmarks/bench_ich_spmv.py — so schedule construction uses the band
+    directly; the runtime walk remains correct where k_i is cumulative
+    (simulator/executor/serving).
+    """
+    mu = float(np.mean(row_nnz))
+    upper = mu * (1.0 + eps)
+    w = 2 ** int(np.ceil(np.log2(max(upper, 1.0))))
+    return int(min(max(w, min_w), max_w))
+
+
+def pack_tiles(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
+               *, rows_per_tile: int = 8, width: int = None, eps: float = 0.33):
+    """CSR -> (values (T,R,W), cols (T,R,W), rowid (T,R)) with row splitting.
+
+    Rows are cut into width-W segments; segments are packed greedily into
+    tiles of R row-slots each (a segment of a heavy row may land in any
+    tile => tile work is uniform at R*W slots).
+    """
+    n = len(indptr) - 1
+    row_nnz = np.diff(indptr)
+    W = width or ich_tile_width(row_nnz, eps)
+    R = rows_per_tile
+    segs = []  # (row, start_in_row, length)
+    for r in range(n):
+        nnz = int(row_nnz[r])
+        for s in range(0, max(nnz, 1), W):
+            segs.append((r, s, min(W, nnz - s) if nnz else 0))
+    T = -(-len(segs) // R)
+    vals = np.zeros((T, R, W), data.dtype)
+    cols = np.zeros((T, R, W), np.int32)
+    rowid = np.full((T, R), -1, np.int32)
+    for i, (r, s, ln) in enumerate(segs):
+        t, j = divmod(i, R)
+        rowid[t, j] = r
+        if ln > 0:
+            base = indptr[r] + s
+            vals[t, j, :ln] = data[base:base + ln]
+            cols[t, j, :ln] = indices[base:base + ln]
+    return vals, cols, rowid, W
+
+
+def _spmv_kernel(rowid_ref, vals_ref, cols_ref, x_ref, out_ref, *, n_rows: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[0]  # (R, W)
+    cols = cols_ref[0]
+    x = x_ref[...]  # (n,)
+    partial = jnp.sum(vals * x[cols], axis=1)  # (R,)
+    rows = rowid_ref[t]  # (R,) SMEM scalars for this tile
+    # accumulate per row-slot; rows may repeat across tiles (split rows)
+    for j in range(rows.shape[0]):
+        r = jnp.clip(rows[j], 0, n_rows - 1)
+        inc = jnp.where(rows[j] >= 0, partial[j], 0.0)
+        out_ref[r] = out_ref[r] + inc
+
+
+def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
+    """vals/cols (T,R,W); rowid (T,R); x (n,). Returns y (n_rows,)."""
+    T, R, W = vals.shape
+    kernel = functools.partial(_spmv_kernel, n_rows=n_rows)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # rowid prefetched to SMEM (the schedule)
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, R, W), lambda t, rowid: (t, 0, 0)),
+            pl.BlockSpec((1, R, W), lambda t, rowid: (t, 0, 0)),
+            pl.BlockSpec(x.shape, lambda t, rowid: (0,)),  # x whole in VMEM
+        ],
+        out_specs=pl.BlockSpec((n_rows,), lambda t, rowid: (0,)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows,), x.dtype),
+        interpret=interpret,
+    )(rowid, vals, cols, x)

@@ -1,0 +1,30 @@
+"""Public wrapper: host-side iCh schedule construction + jitted kernel call."""
+import functools
+
+import jax
+import numpy as np
+
+from .ich_spmv import ich_spmv, ich_tile_width, pack_tiles
+
+
+class IChSpmv:
+    """Pack once (iCh schedule construction), apply many times."""
+
+    def __init__(self, indptr, indices, data, *, rows_per_tile: int = 8,
+                 eps: float = 0.33, width: int = None):
+        self.n_rows = len(indptr) - 1
+        vals, cols, rowid, W = pack_tiles(
+            np.asarray(indptr), np.asarray(indices), np.asarray(data),
+            rows_per_tile=rows_per_tile, width=width, eps=eps)
+        self.width = W
+        self.vals = jax.numpy.asarray(vals)
+        self.cols = jax.numpy.asarray(cols)
+        self.rowid = jax.numpy.asarray(rowid)
+
+    def __call__(self, x, interpret: bool | None = None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        fn = functools.partial(ich_spmv, n_rows=self.n_rows,
+                               interpret=interpret)
+        return jax.jit(fn, static_argnames=())(
+            self.vals, self.cols, self.rowid, x)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the iCh-scheduled SpMV kernel."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ref(indptr, indices, data, x):
+    """CSR @ x via segment-sum, pure numpy/jnp."""
+    n = len(indptr) - 1
+    seg = np.repeat(np.arange(n), np.diff(indptr))
+    prod = jnp.asarray(data) * jnp.asarray(x)[jnp.asarray(indices)]
+    return jnp.zeros(n, prod.dtype).at[jnp.asarray(seg)].add(prod)
+
+
+def tiles_ref(vals, cols, rowid, x, n_rows):
+    """Oracle operating on the packed-tile format itself (isolates packing
+    bugs from kernel bugs)."""
+    partial = (vals * np.asarray(x)[cols]).sum(axis=2)  # (T,R)
+    y = np.zeros(n_rows, vals.dtype)
+    valid = rowid >= 0
+    np.add.at(y, rowid[valid], partial[valid])
+    return jnp.asarray(y)

@@ -1,0 +1,104 @@
+"""Pallas TPU chunked SSD scan (Mamba2 / mLSTM shared algebra).
+
+Computes, per (batch, head):   S_t = a_t * S_{t-1} + k_t (x) v_t,
+                               y_t = q_t . S_t
+in chunked form: grid = (B*H, n_chunks) with chunks innermost; the (N, Pd)
+state lives in fp32 VMEM scratch and persists across the sequential chunk
+steps (TPU grids execute in row-major order — the TPU-native replacement
+for the sequential recurrence, DESIGN.md §2). Per chunk the intra term is
+two (Q,Q)/(Q,N) matmuls on the MXU; chunk length Q=128/256 keeps all
+operands 128-aligned.
+
+Matches models.ssm.chunked_gated_scan (the oracle in ref.py) bit-for-bit up
+to fp32 accumulation order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(q_ref, k_ref, v_ref, la_ref, y_ref, s_final_ref, state_scr, *,
+                n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    q = q_ref[0].astype(jnp.float32)   # (Q, N)
+    k = k_ref[0].astype(jnp.float32)   # (Q, N)
+    v = v_ref[0].astype(jnp.float32)   # (Q, Pd)
+    la = la_ref[0].astype(jnp.float32)  # (Q,)
+    l = jnp.cumsum(la)                 # inclusive in-chunk decay
+    total = l[-1]
+
+    # intra-chunk: s_ij = (q_i . k_j) exp(l_i - l_j), j <= i
+    s_qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    dec = jnp.exp(jnp.clip(l[:, None] - l[None, :], -60.0, 0.0))
+    Q = q.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    s_qk = jnp.where(jj <= ii, s_qk * dec, 0.0)
+    y = jax.lax.dot(s_qk, v, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(l_i) q_i . S_prev   (state (N, Pd))
+    y = y + jax.lax.dot(q, state_scr[...],
+                        preferred_element_type=jnp.float32) * jnp.exp(l)[:, None]
+
+    # state update: S = exp(total) S_prev + sum_j exp(total - l_j) k_j (x) v_j
+    w = jnp.exp(jnp.clip(total - l, -60.0, 0.0))
+    state_scr[...] = state_scr[...] * jnp.exp(total) + jax.lax.dot_general(
+        k * w[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        s_final_ref[0, ...] = state_scr[...]
+
+
+def mamba_scan(q, k, v, log_a, *, chunk: int = 128, interpret: bool = False):
+    """q,k (B,S,H,N); v (B,S,H,Pd); log_a (B,S,H) <= 0.
+    Returns (y (B,S,H,Pd), final_state (B,H,N,Pd) fp32).
+    S must be a multiple of `chunk` (callers pad)."""
+    B, S, H, N = q.shape
+    Pd = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def bh(t):  # (B,S,H,*) -> (B*H, S, *)
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, t.shape[-1])
+
+    qr, kr, vr = bh(q), bh(k), bh(v)
+    lar = log_a.transpose(0, 2, 1).reshape(B * H, S)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Pd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, Pd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, Pd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, Pd), v.dtype),
+            jax.ShapeDtypeStruct((B * H, N, Pd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr, lar)
+    y = y.reshape(B, H, S, Pd).transpose(0, 2, 1, 3)
+    return y, s_final.reshape(B, H, N, Pd)

@@ -1,0 +1,21 @@
+"""Jitted wrapper: pads S to the chunk multiple and dispatches."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mamba_scan import mamba_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan_op(q, k, v, log_a, *, chunk: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S = q.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    y, s = mamba_scan(q, k, v, log_a, chunk=chunk, interpret=interpret)
+    return y[:, :S], s

@@ -1,0 +1,9 @@
+"""Oracle: the XLA chunked scan from models.ssm (itself validated against a
+step-by-step sequential recurrence in tests/test_ssm)."""
+from ...models.ssm import chunked_gated_scan
+
+
+def ssd_ref(q, k, v, log_a, chunk: int = 128):
+    y, state = chunked_gated_scan(q, k, v, log_a, chunk=chunk)
+    # kernel state layout is (B,H,N,Pd); oracle returns (B,H,Pd,N)
+    return y, state.swapaxes(-1, -2)

@@ -1,0 +1,105 @@
+"""Parse collective statistics out of post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but NOT collective
+traffic, so we parse ``compiled.as_text()``: for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction we
+record result bytes, derive operand bytes from the replica-group size, and
+compute ring-algorithm wire bytes per participating device (the number that
+actually divides by link bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # per-kind: [count, result_bytes, operand_bytes, wire_bytes_per_device]
+    by_kind: dict
+    total_operand_bytes: float
+    total_wire_bytes: float
+
+    def summary(self) -> str:
+        lines = []
+        for k, (c, rb, ob, wb) in sorted(self.by_kind.items()):
+            lines.append(f"{k:20s} n={c:4d} result={rb/1e6:10.1f}MB "
+                         f"operand={ob/1e6:10.1f}MB wire/dev={wb/1e6:10.1f}MB")
+        return "\n".join(lines)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_kind = defaultdict(lambda: [0, 0.0, 0.0, 0.0])
+    seen_starts = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        # avoid double counting async start/done pairs: count starts, skip done
+        if "-done(" in line:
+            continue
+        rb = _type_bytes(type_str)
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                g = int(mi.group(2))
+        if kind == "all-gather":
+            ob = rb / max(g, 1)
+            wire = rb * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            ob = rb * g
+            wire = rb * (g - 1)
+        elif kind == "all-reduce":
+            ob = rb
+            wire = 2.0 * rb * (g - 1) / max(g, 1)
+        elif kind == "all-to-all":
+            ob = rb
+            wire = rb * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            ob = rb
+            wire = rb
+        ent = by_kind[kind]
+        ent[0] += 1
+        ent[1] += rb
+        ent[2] += ob
+        ent[3] += wire
+    total_ob = sum(v[2] for v in by_kind.values())
+    total_wb = sum(v[3] for v in by_kind.values())
+    return CollectiveStats(dict(by_kind), total_ob, total_wb)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,38 @@
+"""Production mesh construction (deliverable (e), MULTI-POD DRY-RUN §1).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. Single pod = 16x16 = 256 chips (v5e pod); multi-pod = 2x16x16 = 512.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — dryrun.py must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_smoke_mesh():
+    """1x1 mesh over the single real device (smoke tests / examples)."""
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def batch_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# Hardware constants for the roofline (TPU v5e per chip).
+PEAK_FLOPS = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link

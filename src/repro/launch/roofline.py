@@ -1,0 +1,170 @@
+"""Roofline analysis (deliverable (g)).
+
+Reads the dry-run JSON records and derives, per (arch x shape) on the
+single-pod mesh:
+
+  compute term    = HLO_FLOPs_per_device / PEAK_FLOPS          [s]
+  memory term     = HLO_bytes_per_device / HBM_BW              [s]
+  collective term = wire_bytes_per_device / ICI_BW             [s]
+
+(cost_analysis is the per-device SPMD program, so dividing by per-chip peaks
+is the brief's "HLO/(chips x peak)" computed shard-wise.) Also reports
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) against HLO FLOPs — the
+useful-compute ratio that exposes remat/recompute and masked-block waste —
+the dominant term, and the roofline fraction = compute_term / max(terms).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+       [--mesh 16x16] [--csv out.csv] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from ..configs import ARCHS, SHAPES
+from .costmodel import MeshShape, cell_cost
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+HBM_BYTES = 16 * 2**30  # v5e per chip
+
+
+def tokens_of(shape) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one token per row
+
+
+def model_flops(arch, shape) -> float:
+    """6*N*D for train, 2*N*D for inference (fwd only); MoE uses active N."""
+    n = arch.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens_of(shape)
+
+
+def analyze(rec: dict, cmax: float = None, **knobs) -> dict:
+    """Roofline terms from the ANALYTIC cost model (launch/costmodel.py —
+    XLA cost_analysis under-counts While bodies, see module docstring);
+    the dry-run record supplies memory fit + the collective inventory."""
+    import dataclasses as _dc
+    arch = ARCHS[rec["arch"]]
+    if cmax is not None and arch.moe:
+        arch = _dc.replace(arch, moe_cmax_factor=cmax)
+    shape = SHAPES[rec["shape"]]
+    multi = rec["mesh"] == "2x16x16"
+    mesh = MeshShape(pods=2 if multi else 1)
+    cost = cell_cost(arch, shape, mesh, **knobs)
+    terms = cost.terms()
+    dom = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    m = rec["memory"]
+    # donated outputs alias inputs: live bytes = args + temps + unaliased out
+    mem_total = m["argument_bytes"] + m["temp_bytes"] + max(
+        0, m["output_bytes"] - m["alias_bytes"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": rec["status"],
+        "t_compute_s": terms["compute"], "t_memory_s": terms["memory"],
+        "t_collective_s": terms["collective"],
+        "dominant": dom,
+        "roofline_fraction": (terms["compute"] / t_bound) if t_bound > 0 else 0.0,
+        "model_flops": cost.useful_flops * mesh.chips,
+        "hlo_flops_measured": rec["cost"].get("flops", 0.0),
+        "useful_flops_ratio": cost.useful_flops / cost.flops if cost.flops else 0.0,
+        "mem_per_dev_bytes": mem_total,
+        "fits_hbm": mem_total <= HBM_BYTES,
+        "step_time_bound_s": t_bound,
+        "mfu_bound": (cost.useful_flops / PEAK_FLOPS) / t_bound if t_bound > 0 else 0.0,
+    }
+
+
+def bottleneck_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("overlap/shrink collectives: reduce-scatter grads, bf16-cast "
+                "before FSDP gather, shard_map flash-decode for seq-sharded KV")
+    if d == "memory":
+        return ("raise arithmetic intensity: fuse attention (Pallas flash), "
+                "larger per-step tile reuse, quantized KV")
+    return ("compute-bound: cut non-useful FLOPs (remat policy, causal block "
+            "skipping, masked-expert waste) to close useful-ratio gap")
+
+
+def _opt_knobs(rec):
+    """The §Perf lever set, per shape kind (serve-opt / train-opt / kernels)."""
+    shape = SHAPES[rec["shape"]]
+    if shape.kind == "train":
+        return dict(bf16_gather=True, causal_skip=True, ssm_kernel=True,
+                    remat_factor=3.2, cmax=1.25)
+    if shape.kind == "prefill":
+        return dict(causal_skip=True, ssm_kernel=True, decode_fsdp=False)
+    return dict(decode_fsdp=False, ssm_kernel=True)
+
+
+def load(dir_: str, mesh: str, opt: bool = False):
+    rows = []
+    for f in sorted(pathlib.Path(dir_).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec["mesh"] != mesh:
+            continue
+        if rec["status"] != "OK":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": rec["status"]})
+            continue
+        knobs = _opt_knobs(rec) if opt else {}
+        rows.append(analyze(rec, **knobs))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", default="results/roofline.csv")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf lever set (serve-opt/train-opt/kernels)")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh, opt=args.opt)
+
+    hdr = ("arch,shape,status,t_compute_ms,t_memory_ms,t_collective_ms,"
+           "dominant,roofline_fraction,useful_flops_ratio,mfu_bound,"
+           "mem_per_dev_GiB,fits_hbm")
+    lines = [hdr]
+    for r in rows:
+        if r["status"] != "OK":
+            lines.append(f"{r['arch']},{r['shape']},{r['status']},,,,,,,,,")
+            continue
+        lines.append(
+            f"{r['arch']},{r['shape']},OK,"
+            f"{1e3*r['t_compute_s']:.3f},{1e3*r['t_memory_s']:.3f},"
+            f"{1e3*r['t_collective_s']:.3f},{r['dominant']},"
+            f"{r['roofline_fraction']:.3f},{r['useful_flops_ratio']:.3f},"
+            f"{r['mfu_bound']:.3f},{r['mem_per_dev_bytes']/2**30:.2f},"
+            f"{r['fits_hbm']}")
+    out = "\n".join(lines)
+    print(out)
+    if args.csv:
+        p = pathlib.Path(args.csv)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(out + "\n")
+    if args.markdown:
+        print()
+        print("| arch | shape | compute | memory | collective | dominant | "
+              "roofline frac | useful FLOPs | note |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "OK":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"{r['status']} | — | — | sub-quadratic only |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {1e3*r['t_compute_s']:.2f}ms"
+                  f" | {1e3*r['t_memory_s']:.2f}ms | {1e3*r['t_collective_s']:.2f}ms"
+                  f" | {r['dominant']} | {r['roofline_fraction']:.2f} | "
+                  f"{r['useful_flops_ratio']:.2f} | {bottleneck_note(r)[:60]} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run §2): weak-type
+correct, shardable, no device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import model as M
+from ..train import train_step as TS
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b = train_batch_specs(cfg, shape)
+    del b["labels"]
+    return b
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    """(tokens, cache, pos) for decode_step."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = sds((B, 1), jnp.int32)
+    cache = M.cache_specs(cfg, B, S, dtype)
+    pos = sds((), jnp.int32)
+    return tokens, cache, pos
+
+
+def state_specs(cfg: ArchConfig, max_seq: int, tcfg=None):
+    tcfg = tcfg or TS.TrainConfig()
+    return jax.eval_shape(
+        lambda: TS.init_train_state(cfg, jax.random.PRNGKey(0), max_seq, tcfg))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """All inputs for the step this shape lowers (brief: dry-run §2)."""
+    if shape.kind == "train":
+        return {"state": state_specs(cfg, shape.seq_len),
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": jax.eval_shape(
+                    lambda: M.init_params(cfg, jax.random.PRNGKey(0), shape.seq_len)),
+                "batch": prefill_batch_specs(cfg, shape)}
+    tokens, cache, pos = decode_input_specs(cfg, shape)
+    return {"params": jax.eval_shape(
+                lambda: M.init_params(cfg, jax.random.PRNGKey(0), shape.seq_len)),
+            "tokens": tokens, "cache": cache, "pos": pos}

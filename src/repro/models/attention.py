@@ -1,0 +1,306 @@
+"""GQA attention: blockwise (flash-style, memory-bounded) XLA path, KV cache
+decode path, sliding windows, and cross-attention (whisper).
+
+GQA is computed with grouped einsums — K/V are NEVER materialized at Hq
+width (a (B,S,Hq,dh) repeat of a 32k cache is GiBs per layer). q is viewed
+as (B, S, Hkv, rep, dh) and contracted against (B, S, Hkv, dh).
+
+The blockwise path is the XLA mirror of kernels/flash_attention (same
+online-softmax algorithm) so memory stays O(S*block) at 32k prefill and the
+Pallas kernel has a shape-identical oracle. The Pallas kernel additionally
+skips fully-masked causal blocks — an optimization recorded in §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, dh = cfg.d_model, cfg.dh
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, hq * dh),
+        "wk": L.dense_init(ks[1], d, hkv * dh),
+        "wv": L.dense_init(ks[2], d, hkv * dh),
+        "wo": L.dense_init(ks[3], hq * dh, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+    return p
+
+
+def attention_pspec(cfg, tp: int = 16):
+    """Heads over "model" when divisible; else FSDP-only (DESIGN.md §5)."""
+    q_tp = "model" if (cfg.n_heads * cfg.dh) % tp == 0 and cfg.n_heads % tp == 0 else None
+    kv_tp = "model" if q_tp == "model" and cfg.n_kv_heads % tp == 0 else None
+    p = {
+        "wq": P("data", q_tp),
+        "wk": P("data", kv_tp),
+        "wv": P("data", kv_tp),
+        "wo": P(q_tp, "data"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(q_tp)
+        p["bk"] = P(kv_tp)
+        p["bv"] = P(kv_tp)
+    return p
+
+
+def _qkv(cfg, p, x, xkv=None):
+    xkv = x if xkv is None else xkv
+    B, S = x.shape[:2]
+    Skv = xkv.shape[1]
+    q = x @ p["wq"].astype(x.dtype)
+    k = xkv @ p["wk"].astype(x.dtype)
+    v = xkv @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.dh)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.dh)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.dh)
+    return q, k, v
+
+
+def _group_q(q, hkv):
+    """(B,S,Hq,dh) -> (B,S,Hkv,rep,dh)."""
+    B, S, Hq, dh = q.shape
+    return q.reshape(B, S, hkv, Hq // hkv, dh)
+
+
+def blockwise_attention(
+    q, k, v, *,
+    causal: bool,
+    q_offset: int = 0,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+):
+    """Online-softmax attention, O(S*block) memory. q (B,Sq,Hq,dh),
+    k/v (B,Skv,Hkv,dh) un-repeated. fp32 accumulation."""
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = dh ** -0.5
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    nq = -(-Sq // q_block)
+    nk = -(-Skv // kv_block)
+    pad_q = nq * q_block - Sq
+    pad_k = nk * kv_block - Skv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    # (B,Hkv,rep,nq,qb,dh) / (B,Hkv,nk,kb,dh)
+    qp = qp.reshape(B, nq, q_block, Hkv, rep, dh).transpose(0, 3, 4, 1, 2, 5)
+    kp = kp.reshape(B, nk, kv_block, Hkv, dh).transpose(0, 3, 1, 2, 4)
+    vp = vp.reshape(B, nk, kv_block, Hkv, dh).transpose(0, 3, 1, 2, 4)
+
+    q_pos = q_offset + jnp.arange(nq * q_block).reshape(nq, q_block)
+    k_pos = jnp.arange(nk * kv_block).reshape(nk, kv_block)
+    k_valid = (jnp.arange(nk * kv_block) < Skv).reshape(nk, kv_block)
+
+    def per_q_block(qi):
+        qb = qp[:, :, :, qi]  # (B,Hkv,rep,qb,dh)
+
+        @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb, kp[:, :, ki],
+                           preferred_element_type=jnp.float32) * scale
+            mask = k_valid[ki][None, :]
+            if causal:
+                mask = mask & (k_pos[ki][None, :] <= q_pos[qi][:, None])
+            if window > 0:
+                mask = mask & (k_pos[ki][None, :] > q_pos[qi][:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vp[:, :, ki].astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, Hkv, rep, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, rep, q_block), jnp.float32),
+            jnp.zeros((B, Hkv, rep, q_block, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(per_q_block, jnp.arange(nq))  # (nq,B,Hkv,rep,qb,dh)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_block, Hq, dh)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0):
+    """Materialized-scores attention (decode + small shapes), grouped GQA.
+    fp32 softmax. q_offset may be a traced scalar (decode position)."""
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qg = _group_q(q, Hkv)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, dh).astype(v.dtype)
+
+
+def attention(
+    cfg, p, x, *,
+    positions=None,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "blockwise",
+    cross_kv=None,
+):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    if cross_kv is not None:
+        q = (x @ p["wq"].astype(x.dtype)).reshape(x.shape[0], x.shape[1], cfg.n_heads, cfg.dh)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype).reshape(cfg.n_heads, cfg.dh)
+        k, v = cross_kv
+        kv = None
+    else:
+        q, k, v = _qkv(cfg, p, x)
+        if cfg.rope_theta > 0:
+            pos = positions if positions is not None else jnp.arange(x.shape[1])
+            cos, sin = L.rope_freqs(pos, cfg.dh, cfg.rope_theta)
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        kv = (k, v)
+    if impl == "blockwise" and x.shape[1] >= 1024:
+        out = blockwise_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = full_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.dh)
+    return out @ p["wo"].astype(x.dtype), kv
+
+
+def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window: int = 0,
+                     cross: bool = False):
+    """Single-token decode. cache_k/v: (B, S_max, Hkv, dh); pos: scalar int —
+    current position (same for every row of the batch, serve_step semantics).
+    Returns (out, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    if cross:
+        q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, cfg.dh)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype).reshape(cfg.n_heads, cfg.dh)
+        k, v = cache_k, cache_v
+    else:
+        q, k1, v1 = _qkv(cfg, p, x)
+        if cfg.rope_theta > 0:
+            cos, sin = L.rope_freqs(jnp.asarray(pos)[None], cfg.dh, cfg.rope_theta)
+            q = L.apply_rope(q, cos, sin)
+            k1 = L.apply_rope(k1, cos, sin)
+        write = pos % cache_k.shape[1] if window > 0 else pos  # ring buffer
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k1.astype(cache_k.dtype), (0, write, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v1.astype(cache_v.dtype), (0, write, 0, 0))
+        k, v = cache_k, cache_v
+    # windowed ring cache: every live slot is within the window by
+    # construction, and `k_pos <= pos` masks slots not yet written, so the
+    # causal mask is correct for both the ring and the linear cache.
+    out = full_attention(q, k, v, causal=not cross, q_offset=pos)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.dh) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+def decode_attention_seqsharded(cfg, p, x, cache_k, cache_v, pos, dist, *,
+                                window: int = 0):
+    """Distributed flash-decoding for sequence-sharded KV caches (§Perf).
+
+    When kv-heads don't divide TP, the cache shards its SEQ dim over
+    "model". The BASELINE decode lets XLA all-gather each layer's cache
+    (O(cache/layer) wire per step). Here instead every model rank computes
+    partial attention (m_i, l_i, acc_i) over its local 1/tp of the context
+    and ranks merge the online-softmax stats — wire per layer drops from
+    O(B*S*Hkv*dh) to O(tp * B*Hq*(dh+2)): ~5000x less for phi3-medium
+    decode_32k. The cache write lands only on the owner rank's shard.
+    """
+    B = x.shape[0]
+    q, k1, v1 = _qkv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        cos, sin = L.rope_freqs(jnp.asarray(pos)[None], cfg.dh, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k1 = L.apply_rope(k1, cos, sin)
+
+    tp_axis = dist.tp_axis
+    bspec = P((*dist.batch_axes,), None, None, None)
+
+    def block(q_l, k_new, v_new, ck, cv):
+        tp = jax.lax.axis_size(tp_axis)
+        r = jax.lax.axis_index(tp_axis)
+        s_loc = ck.shape[1]
+        # owner-rank cache write (masked dynamic update)
+        local_pos = pos - r * s_loc
+        in_range = (local_pos >= 0) & (local_pos < s_loc)
+        lp = jnp.clip(local_pos, 0, s_loc - 1)
+        ck_new = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype),
+                                              (0, lp, 0, 0))
+        cv_new = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype),
+                                              (0, lp, 0, 0))
+        ck = jnp.where(in_range, ck_new, ck)
+        cv = jnp.where(in_range, cv_new, cv)
+        # local partial attention over this rank's context shard
+        qg = _group_q(q_l, cfg.n_kv_heads)  # (B,1,G,rep,dh)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck,
+                       preferred_element_type=jnp.float32) * (cfg.dh ** -0.5)
+        k_pos = r * s_loc + jnp.arange(s_loc)
+        mask = k_pos[None, None, None, None, :] <= pos
+        if window > 0:
+            mask = mask & (k_pos[None, None, None, None, :] > pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m = s.max(axis=-1)                        # (B,G,rep,1)
+        pexp = jnp.exp(s - m[..., None])
+        l = pexp.sum(axis=-1)
+        acc = jnp.einsum("bgrqk,bkgd->bgrqd", pexp, cv.astype(jnp.float32))
+        # merge partial softmax stats across ranks (tiny collectives)
+        m_all = jax.lax.all_gather(m, tp_axis)    # (tp,B,G,rep,1)
+        l_all = jax.lax.all_gather(l, tp_axis)
+        acc_all = jax.lax.all_gather(acc, tp_axis)
+        m_g = m_all.max(axis=0)
+        corr = jnp.exp(m_all - m_g[None])
+        l_g = (l_all * corr).sum(axis=0)
+        acc_g = (acc_all * corr[..., None]).sum(axis=0)
+        out = acc_g / jnp.maximum(l_g, 1e-20)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, cfg.n_heads * cfg.dh)
+        return out.astype(x.dtype), ck, cv
+
+    out, ck, cv = jax.shard_map(
+        block, mesh=dist.mesh,
+        in_specs=(P((*dist.batch_axes,), None, None, None),
+                  bspec, bspec,
+                  P((*dist.batch_axes,), dist.tp_axis, None, None),
+                  P((*dist.batch_axes,), dist.tp_axis, None, None)),
+        out_specs=(P((*dist.batch_axes,), None, None),
+                   P((*dist.batch_axes,), dist.tp_axis, None, None),
+                   P((*dist.batch_axes,), dist.tp_axis, None, None)),
+        check_vma=False,
+    )(q, k1, v1, cache_k, cache_v)
+    return out @ p["wo"].astype(x.dtype), ck, cv

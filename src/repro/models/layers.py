@@ -1,0 +1,138 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Pure-functional style: ``init_*`` builds a params dict; ``*_pspec`` builds a
+PartitionSpec tree with the SAME structure (tested); apply functions are free
+functions. Sharding axis convention (launch/mesh.py):
+
+  "data"  — DP/FSDP axis (params: FSDP-sharded; activations: batch)
+  "model" — TP axis (params: heads / ffn / vocab / experts)
+  "pod"   — multi-pod DP axis (params replicated, activations batch-sharded)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------- helpers
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ------------------------------------------------------------------ norms
+
+def init_norm(cfg, key=None):
+    d = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {}  # nonparametric_ln (olmo)
+
+
+def norm_pspec(cfg):
+    if cfg.norm == "rmsnorm":
+        return {"scale": P(None)}
+    if cfg.norm == "layernorm":
+        return {"scale": P(None), "bias": P(None)}
+    return {}
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"]).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        xf = xf * p["scale"] + p["bias"]
+    return xf.astype(x.dtype)  # nonparametric_ln: no affine
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope_freqs(positions: jnp.ndarray, dh: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,S) -> cos/sin (...,S, dh//2), fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (B,S,H,dh); cos/sin (B,S,dh//2) or (S,dh//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLPs
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wi": dense_init(k1, d, f), "wg": dense_init(k2, d, f), "wo": dense_init(k3, f, d)}
+    return {"wi": dense_init(k1, d, f), "wo": dense_init(k3, f, d)}
+
+
+def mlp_pspec(cfg):
+    if cfg.act == "swiglu":
+        return {"wi": P("data", "model"), "wg": P("data", "model"), "wo": P("model", "data")}
+    return {"wi": P("data", "model"), "wo": P("model", "data")}
+
+
+def apply_mlp(cfg, p, x):
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+
+def init_embeddings(key, cfg, max_seq: int = 0):
+    keys = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    p = {"tok": embed_init(keys[0], V, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(keys[1], cfg.d_model, V)
+    if cfg.rope_theta == 0.0 and max_seq > 0:  # learned positions (whisper)
+        p["pos"] = embed_init(keys[2], max_seq, cfg.d_model)
+    return p
+
+
+def embeddings_pspec(cfg, max_seq: int = 0):
+    p = {"tok": P("model", "data")}
+    if not cfg.tie_embeddings:
+        p["head"] = P("data", "model")
+    if cfg.rope_theta == 0.0 and max_seq > 0:
+        p["pos"] = P(None, "data")
+    return p
+
+
+def embed_tokens(cfg, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(cfg, p, x):
+    """Logits stay in compute dtype (bf16): at (B,S,V) they are the largest
+    activation; the CE upcasts inside its (fused) reductions instead."""
+    w = p["head"] if not cfg.tie_embeddings else p["tok"].T
+    return x @ w.astype(x.dtype)

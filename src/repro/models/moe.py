@@ -1,0 +1,277 @@
+"""Mixture-of-Experts layer with iCh-adaptive capacity + token stealing.
+
+The paper's loop-scheduling problem reappears verbatim in MoE: tokens are
+loop iterations, experts are workers, and router imbalance is the irregular
+workload. This layer integrates iCh (DESIGN.md §2) as:
+
+* per-expert *capacity* = the chunk size analogue, adapted by the paper's
+  classification (eqs. 1-3, 8) on router load counts (the throughput signal
+  that is exact and free in-graph, replacing wall-clock k_i);
+* *work stealing* = overflow tokens rerouted to the token's best underloaded
+  alternative expert (the THE-protocol steal-half becomes a second dispatch
+  round — on TPU the "steal" must be schedule-time, DESIGN.md §2);
+* `cap_scale` (E,) carried in the train state = the d_i array.
+
+Dispatch is sort-based (argsort by expert + in-segment positions), never the
+O(T*E*C) GShard one-hot einsum, so it scales to 1M-token global batches.
+
+Distribution: expert-parallel over the "model" axis via shard_map — tokens
+stay data-sharded and replicated across model ranks, each model rank runs its
+E/tp local experts, partial token outputs are psum'ed over "model" (same
+collective cost as a Megatron TP FFN all-reduce). Expert weights are
+additionally FSDP-sharded over "data" and all-gathered on entry (ZeRO-3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """How a model step is laid out on the mesh (launch/mesh.py)."""
+    mesh: jax.sharding.Mesh
+    batch_axes: tuple = ("data",)
+    tp_axis: str = "model"
+    fsdp_axis: Optional[str] = "data"
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+
+def init_moe(key, cfg):
+    d, fe, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], d, e),
+        "wi": jax.random.normal(ks[1], (e, d, fe)) * (d ** -0.5),
+        "wg": jax.random.normal(ks[2], (e, d, fe)) * (d ** -0.5),
+        "wo": jax.random.normal(ks[3], (e, fe, d)) * (fe ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": L.dense_init(kk[0], d, fs),
+            "wg": L.dense_init(kk[1], d, fs),
+            "wo": L.dense_init(kk[2], fs, d),
+        }
+    return p
+
+
+def moe_pspec(cfg):
+    p = {
+        "router": P(None, None),
+        "wi": P("model", "data", None),
+        "wg": P("model", "data", None),
+        "wo": P("model", None, "data"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = {"wi": P("data", "model"), "wg": P("data", "model"),
+                       "wo": P("model", "data")}
+    return p
+
+
+def capacity(cfg, t_local: int, factor: float = 1.25) -> int:
+    """Base per-expert capacity for a local token pool of size t_local."""
+    return max(4, int(-(-cfg.experts_per_token * t_local * factor // cfg.n_experts)))
+
+
+# ----------------------------------------------------------------------------
+# iCh balancer (paper §3.2 applied to expert load)
+# ----------------------------------------------------------------------------
+
+def ich_update_cap_scale(counts: jnp.ndarray, cap_scale: jnp.ndarray,
+                         eps: float = 0.33, step: float = 1.5) -> jnp.ndarray:
+    """Adapt per-expert capacity scale with the paper's classification.
+
+    counts: router load per expert (the k_i signal). Overloaded ("high")
+    experts grow their capacity share, underloaded ("low") shrink it — the
+    *chunk-size* direction here follows load because capacity is a buffer
+    bound, not an interruption interval; the paper's inverted rule lives in
+    the steal direction (overflow moves low-ward).
+
+    The multiplicative step is damped (1.5x, not 2x — undamped doubling
+    oscillates against drifting routers) and the scale is clipped to the
+    materializable range [0.25, 2.0] (C_max = 2*C_base is the compiled
+    buffer). Total scale is renormalized only when it EXCEEDS the budget
+    (sum == E), i.e. capacity is taken from cold experts only when hot ones
+    actually need it.
+    """
+    mu = jnp.mean(counts)
+    delta = eps * mu
+    up = counts > mu + delta
+    down = counts < mu - delta
+    new = jnp.where(up, cap_scale * step, jnp.where(down, cap_scale / step,
+                                                    cap_scale))
+    new = jnp.clip(new, 0.25, 2.0)
+    budget = jnp.float32(cap_scale.shape[0])
+    over = new.sum() / budget
+    return jnp.where(over > 1.0, new / over, new)
+
+
+# ----------------------------------------------------------------------------
+# Sort-based dispatch with capacity + one steal round
+# ----------------------------------------------------------------------------
+
+def _dispatch_positions(experts_flat: jnp.ndarray, n_experts: int):
+    """positions of each (token,choice) entry within its expert segment."""
+    order = jnp.argsort(experts_flat, stable=True)
+    es = experts_flat[order]
+    seg_start = jnp.searchsorted(es, jnp.arange(n_experts))
+    pos_sorted = jnp.arange(es.shape[0]) - seg_start[es]
+    # scatter positions back to entry order
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    return pos
+
+
+def moe_local(cfg, p, x, cap_scale, *, eps: float = 0.33,
+              n_local_experts: Optional[int] = None,
+              local_expert_offset: int = 0,
+              capacity_factor: float = 1.25,
+              steal: bool = True):
+    """MoE forward on a local token pool x (T, D).
+
+    Router runs over ALL experts; only entries whose expert falls in
+    [offset, offset + n_local) are dispatched here (EP under shard_map).
+    Returns (y (T,D) partial output, aux dict).
+    """
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    e_loc = n_local_experts or E
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w_topk, e_topk = jax.lax.top_k(probs, K)  # (T,K)
+    w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e  (global via psum
+    # by the shard_map caller)
+    counts_all = jnp.zeros((E,), jnp.float32).at[e_topk.reshape(-1)].add(1.0)
+    me = probs.mean(axis=0)
+    aux_loss = E * jnp.sum((counts_all / (T * K)) * me)
+
+    C_base = capacity(cfg, T, capacity_factor)
+    C_max = max(C_base, int(round(getattr(cfg, "moe_cmax_factor", 2.0) * C_base)))
+    cap_e = jnp.clip(jnp.round(C_base * cap_scale), 4, C_max).astype(jnp.int32)  # (E,)
+
+    ef = e_topk.reshape(-1)            # (T*K,)
+    tf = jnp.repeat(jnp.arange(T), K)  # token id per entry
+    wf = w_topk.reshape(-1)
+
+    pos = _dispatch_positions(ef, E)
+    keep = pos < cap_e[ef]
+
+    # ---- steal round: dropped entries go to the token's best LOW expert ----
+    if steal:
+        mu = counts_all.mean()
+        slack = jnp.maximum(cap_e.astype(jnp.float32) - counts_all, 0.0)  # (E,)
+        # per entry: token's alternative choices' slack (prefer max slack)
+        alt_slack = slack[e_topk]                       # (T,K)
+        fallback = e_topk[jnp.arange(T), jnp.argmax(alt_slack, axis=-1)]  # (T,)
+        ef2 = jnp.where(keep, ef, fallback[tf])
+        used = jnp.zeros((E,), jnp.int32).at[ef].add(keep.astype(jnp.int32))
+        pos2 = _dispatch_positions(jnp.where(keep, E + 1, ef2), E + 2)  # rank among stolen only
+        pos2 = pos2 + used[ef2]
+        keep2 = (~keep) & (pos2 < cap_e[ef2])
+        ef = jnp.where(keep2, ef2, ef)
+        pos = jnp.where(keep2, pos2, pos)
+        stolen = keep2.sum()
+        keep = keep | keep2
+    else:
+        stolen = jnp.zeros((), jnp.int32)
+
+    dropped = (~keep).sum()
+
+    # ---- local dispatch: only entries on [offset, offset+e_loc) ----
+    # Slot-indexed dispatch: build an (E_loc, C_max) slot->token map and
+    # gather/scatter through it, so intermediate buffers scale with the
+    # expert buffer size (E_loc*C_max*D), NOT with T*K*D (6-8x larger at
+    # 1M-token global batches; the difference between fitting HBM or not).
+    e_rel = ef - local_expert_offset
+    local = keep & (e_rel >= 0) & (e_rel < e_loc)
+    e_idx = jnp.where(local, e_rel, 0)
+    c_idx = jnp.where(local, jnp.minimum(pos, C_max - 1), 0)
+    slot_tok = jnp.full((e_loc, C_max), -1, jnp.int32).at[e_idx, c_idx].max(
+        jnp.where(local, tf, -1).astype(jnp.int32))
+    slot_w = jnp.zeros((e_loc, C_max), jnp.float32).at[e_idx, c_idx].max(
+        jnp.where(local, wf, 0.0))
+    slot_valid = slot_tok >= 0
+    buf = jnp.where(slot_valid[..., None],
+                    x[jnp.maximum(slot_tok, 0)], 0.0).astype(x.dtype)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    hb = jax.nn.silu(g) * h
+    yb = jnp.einsum("ecf,efd->ecd", hb, p["wo"].astype(x.dtype))
+
+    contrib = yb * (slot_w * slot_valid)[..., None].astype(yb.dtype)
+    y = jnp.zeros_like(x).at[jnp.maximum(slot_tok, 0).reshape(-1)].add(
+        contrib.reshape(e_loc * C_max, D))
+
+    aux = {"aux_loss": aux_loss, "dropped": dropped.astype(jnp.float32),
+           "stolen": stolen.astype(jnp.float32), "counts": counts_all,
+           "entries": jnp.float32(T * K)}
+    return y, aux
+
+
+def apply_moe(cfg, p, x, cap_scale, *, dist: Optional[DistContext] = None,
+              eps: float = 0.33, steal: bool = True,
+              capacity_factor: float = 1.25):
+    """MoE block on x (B,S,D) (or (B,1,D) decode). Returns (y, aux)."""
+    B, S, D = x.shape
+    x2 = x.reshape(B * S, D)
+
+    if dist is None:
+        y2, aux = moe_local(cfg, p, x2, cap_scale, eps=eps, steal=steal,
+                            capacity_factor=capacity_factor)
+    else:
+        tp = dist.tp
+        e_loc = cfg.n_experts // tp
+        bspec = P((*dist.batch_axes,), None)
+        wspec_i = P(dist.tp_axis, dist.fsdp_axis, None)
+        wspec_o = P(dist.tp_axis, None, dist.fsdp_axis)
+
+        def block(x_l, router, wi, wg, wo, cap_l):
+            if dist.fsdp_axis:
+                wi = jax.lax.all_gather(wi, dist.fsdp_axis, axis=1, tiled=True)
+                wg = jax.lax.all_gather(wg, dist.fsdp_axis, axis=1, tiled=True)
+                wo = jax.lax.all_gather(wo, dist.fsdp_axis, axis=2, tiled=True)
+            idx = jax.lax.axis_index(dist.tp_axis)
+            p_l = {"router": router, "wi": wi, "wg": wg, "wo": wo}
+            y_l, aux_l = moe_local(
+                cfg, p_l, x_l, cap_l, eps=eps,
+                n_local_experts=e_loc, local_expert_offset=idx * e_loc,
+                steal=steal, capacity_factor=capacity_factor)
+            y_l = jax.lax.psum(y_l, dist.tp_axis)
+            # make aux outputs fully replicated: scalars pmean'ed over every
+            # mesh axis; counts summed over data shards (global expert load)
+            all_axes = (*dist.batch_axes, dist.tp_axis)
+            aux_l = {
+                k: (jax.lax.psum(v, dist.batch_axes)  # global expert load
+                    if k == "counts" else jax.lax.pmean(v, all_axes))
+                for k, v in aux_l.items()
+            }
+            return y_l, aux_l
+
+        y2, aux = jax.shard_map(
+            block, mesh=dist.mesh,
+            in_specs=(bspec, P(None, None), wspec_i, wspec_i, wspec_o, P(None)),
+            out_specs=(bspec, {"aux_loss": P(), "dropped": P(), "stolen": P(),
+                               "counts": P(), "entries": P()}),
+            check_vma=False,
+        )(x2, p["router"], p["wi"], p["wg"], p["wo"], cap_scale)
+
+    y = y2.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(x @ sp["wg"].astype(x.dtype)) * (x @ sp["wi"].astype(x.dtype))
+        y = y + h @ sp["wo"].astype(x.dtype)
+    return y, aux

@@ -1,0 +1,323 @@
+"""Recurrent sequence mixers: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+Both Mamba2 and mLSTM share the same algebra,
+
+    S_t = a_t * S_{t-1} + k_t (x) v_t        (state (P, N) per head)
+    y_t = q_t . S_t                          (contract over N)
+
+so one chunked scan (`chunked_gated_scan`) serves both: intra-chunk terms are
+computed in matmul (MXU) form, inter-chunk state is carried by lax.scan —
+the TPU-native replacement for the sequential recurrence (DESIGN.md §2).
+mLSTM's normalizer n_t = a_t n + k_t is folded in as an extra ones-channel of
+v. Numerical simplifications vs. the xLSTM paper (sigmoid gates instead of
+stabilized exponential gating) are deliberate and documented in DESIGN.md;
+the ref.py oracle for kernels/mamba_scan implements the same equations.
+
+sLSTM is inherently sequential (recurrent weights R h_{t-1}); it lowers as a
+length-S lax.scan (a While loop in HLO).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+
+# ----------------------------------------------------------------------------
+# Generic chunked gated scan
+# ----------------------------------------------------------------------------
+
+def chunked_gated_scan(q, k, v, log_a, state=None, chunk: int = 256):
+    """q,k: (B,S,H,N); v: (B,S,H,Pd); log_a: (B,S,H) (<= 0).
+
+    Returns y (B,S,H,Pd), final state (B,H,Pd,N). fp32 state math.
+    """
+    B, S, H, N = q.shape
+    Pd = v.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    def resh(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lc = resh(q), resh(k), resh(v), resh(log_a.astype(jnp.float32))
+    if state is None:
+        state = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(S_prev, inp):
+        qb, kb, vb, lb = inp  # (B,Q,H,*)
+        l = jnp.cumsum(lb, axis=1)  # inclusive within chunk
+        total = l[:, -1]  # (B,H)
+        # intra-chunk: scores_ij = (q_i . k_j) exp(l_i - l_j), j <= i
+        s_qk = jnp.einsum("bihn,bjhn->bhij", qb.astype(jnp.float32),
+                          kb.astype(jnp.float32))
+        decay = jnp.exp(jnp.clip(l[:, :, None] - l[:, None, :], -60.0, 0.0))
+        decay = decay.transpose(0, 3, 1, 2)  # (B,H,i,j)
+        s_qk = jnp.where(causal[None, None], s_qk * decay, 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", s_qk, vb.astype(jnp.float32))
+        # inter-chunk: y_i += exp(l_i) q_i . S_prev
+        y_inter = jnp.einsum("bihn,bhpn->bihp", qb.astype(jnp.float32), S_prev)
+        y_inter = y_inter * jnp.exp(l)[..., None]
+        # state update: S = exp(total) S_prev + sum_j exp(total - l_j) k_j (x) v_j
+        w = jnp.exp(jnp.clip(total[:, None] - l, -60.0, 0.0))  # (B,Q,H)
+        S_new = S_prev * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjhn,bjhp,bjh->bhpn", kb.astype(jnp.float32),
+            vb.astype(jnp.float32), w)
+        return S_new, y_intra + y_inter
+
+    state, ys = jax.lax.scan(step, state, (qc, kc, vc, lc))
+    y = ys.swapaxes(0, 1).reshape(B, nc * Q, H, Pd)[:, :S]
+    return y.astype(v.dtype), state
+
+
+def gated_scan_step(q, k, v, log_a, state):
+    """Single-token recurrence (decode). q,k (B,H,N); v (B,H,Pd);
+    log_a (B,H); state (B,H,Pd,N)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhn,bhp->bhpn", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ----------------------------------------------------------------------------
+# Causal depthwise conv (Mamba front conv, kernel K)
+# ----------------------------------------------------------------------------
+
+def causal_conv(x, w, conv_state=None):
+    """x (B,S,C), w (K,C) depthwise. Returns (y, new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):] if K > 1 else None
+
+
+# ----------------------------------------------------------------------------
+# Mamba2 block (zamba2)
+# ----------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 9)
+    return {
+        "in_z": L.dense_init(ks[0], d, d_in),
+        "in_x": L.dense_init(ks[1], d, d_in),
+        "in_B": L.dense_init(ks[2], d, N),
+        "in_C": L.dense_init(ks[3], d, N),
+        "in_dt": L.dense_init(ks[4], d, H),
+        "conv_x": jax.random.normal(ks[5], (cfg.conv_kernel, d_in)) * 0.2,
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out": L.dense_init(ks[6], d_in, d),
+    }
+
+
+def mamba2_pspec(cfg, tp: int = 16):
+    d_in = cfg.mamba_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    m = "model" if (d_in % tp == 0 and H % tp == 0) else None
+    return {
+        "in_z": P("data", m), "in_x": P("data", m),
+        "in_B": P("data", None), "in_C": P("data", None),
+        "in_dt": P("data", m),
+        "conv_x": P(None, m),
+        "A_log": P(m), "D": P(m), "dt_bias": P(m),
+        "norm": P(m),
+        "out": P(m, "data"),
+    }
+
+
+def apply_mamba2(cfg, p, x, state=None, *, chunk: int = None):
+    """x (B,S,D). state: None (train/prefill from scratch) or dict with
+    'conv' (B,K-1,d_in) and 'ssm' (B,H,hd,N) for streaming/decode."""
+    B, S, D = x.shape
+    d_in = cfg.mamba_expand * D
+    N, hd = cfg.ssm_state, cfg.ssm_head_dim
+    H = d_in // hd
+    chunk = chunk or getattr(cfg, "ssm_chunk", 256)
+    z = x @ p["in_z"].astype(x.dtype)
+    xs = x @ p["in_x"].astype(x.dtype)
+    Bm = x @ p["in_B"].astype(x.dtype)
+    Cm = x @ p["in_C"].astype(x.dtype)
+    dt = jax.nn.softplus((x @ p["in_dt"].astype(x.dtype)).astype(jnp.float32)
+                         + p["dt_bias"])  # (B,S,H)
+    xs, conv_state = causal_conv(xs, p["conv_x"].astype(x.dtype),
+                                 None if state is None else state["conv"])
+    xs = jax.nn.silu(xs)
+    xh = xs.reshape(B, S, H, hd)
+    log_a = -jnp.exp(p["A_log"])[None, None] * dt  # (B,S,H), <= 0
+    # shared B/C across heads (MQA-style); dt folded into v
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    v = xh * dt.astype(xh.dtype)[..., None]
+    ssm_prev = None if state is None else state["ssm"]
+    if S == 1 and ssm_prev is not None:
+        y, ssm = gated_scan_step(q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], ssm_prev)
+        y = y[:, None]
+    else:
+        y, ssm = chunked_gated_scan(q, k, v, log_a, state=ssm_prev, chunk=chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm"]).astype(x.dtype)
+    out = y @ p["out"].astype(x.dtype)
+    new_state = {"conv": conv_state, "ssm": ssm}
+    return out, new_state
+
+
+def mamba2_state_spec(cfg, batch: int, dtype=jnp.float32):
+    d_in = cfg.mamba_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, d_in), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------------
+# mLSTM block (xlstm)
+# ----------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    H = cfg.n_heads
+    dh = d_in // H
+    ks = jax.random.split(key, 8)
+    return {
+        "up_z": L.dense_init(ks[0], d, d_in),
+        "up_x": L.dense_init(ks[1], d, d_in),
+        "wq": L.dense_init(ks[2], d_in, d_in),
+        "wk": L.dense_init(ks[3], d_in, d_in),
+        "wv": L.dense_init(ks[4], d_in, d_in),
+        "w_i": L.dense_init(ks[5], d_in, H),
+        "w_f": L.dense_init(ks[6], d_in, H),
+        "down": L.dense_init(ks[7], d_in, d),
+    }
+
+
+def mlstm_pspec(cfg, tp: int = 16):
+    d_in = cfg.mamba_expand * cfg.d_model
+    m = "model" if (cfg.n_heads % tp == 0) else None
+    return {
+        "up_z": P("data", m), "up_x": P("data", m),
+        "wq": P(m, None), "wk": P(m, None), "wv": P(m, None),
+        "w_i": P(m, None), "w_f": P(m, None),
+        "down": P(m, "data"),
+    }
+
+
+def apply_mlstm(cfg, p, x, state=None, *, chunk: int = None):
+    """x (B,S,D) -> (y, state). state: (B,H,dh+1,dh) fp32 (normalizer folded
+    as the extra v channel)."""
+    B, S, D = x.shape
+    d_in = cfg.mamba_expand * D
+    H = cfg.n_heads
+    dh = d_in // H
+    chunk = chunk or getattr(cfg, "ssm_chunk", 256)
+    z = x @ p["up_z"].astype(x.dtype)
+    xm = x @ p["up_x"].astype(x.dtype)
+    q = (xm @ p["wq"].astype(x.dtype)).reshape(B, S, H, dh) * (dh ** -0.5)
+    k = (xm @ p["wk"].astype(x.dtype)).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = (xm @ p["wv"].astype(x.dtype)).reshape(B, S, H, dh)
+    ig = jax.nn.sigmoid((xm @ p["w_i"].astype(x.dtype)).astype(jnp.float32))
+    fg = jax.nn.sigmoid((xm @ p["w_f"].astype(x.dtype)).astype(jnp.float32) + 1.0)
+    log_a = jnp.log(fg + 1e-9)
+    kk = k * ig.astype(k.dtype)[..., None]
+    v1 = jnp.concatenate([v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)
+    if S == 1 and state is not None:
+        y1, st = gated_scan_step(q[:, 0], kk[:, 0], v1[:, 0], log_a[:, 0], state)
+        y1 = y1[:, None]
+    else:
+        y1, st = chunked_gated_scan(q, kk, v1, log_a, state=state, chunk=chunk)
+    num, den = y1[..., :dh], y1[..., dh:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    return y @ p["down"].astype(x.dtype), st
+
+
+def mlstm_state_spec(cfg, batch: int):
+    d_in = cfg.mamba_expand * cfg.d_model
+    dh = d_in // cfg.n_heads
+    return jax.ShapeDtypeStruct((batch, cfg.n_heads, dh + 1, dh), jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# sLSTM block (xlstm) — inherently sequential
+# ----------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": L.dense_init(ks[0], d, d), "wi": L.dense_init(ks[1], d, H),
+        "wf": L.dense_init(ks[2], d, H), "wo": L.dense_init(ks[3], d, d),
+        "r": jax.random.normal(ks[4], (H, dh, dh)) * (dh ** -0.5),
+        "down": L.dense_init(ks[5], d, d),
+    }
+
+
+def slstm_pspec(cfg, tp: int = 16):
+    return {"wz": P("data", None), "wi": P("data", None),
+            "wf": P("data", None), "wo": P("data", None),
+            "r": P(None, None, None), "down": P("data", None)}
+
+
+def apply_slstm(cfg, p, x, state=None):
+    """x (B,S,D). state: dict h,c (B,H,dh) fp32. Sequential lax.scan over S."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    zs = (x @ p["wz"].astype(x.dtype)).reshape(B, S, H, dh).astype(jnp.float32)
+    os_ = (x @ p["wo"].astype(x.dtype)).reshape(B, S, H, dh).astype(jnp.float32)
+    is_ = (x @ p["wi"].astype(x.dtype)).astype(jnp.float32)
+    fs = (x @ p["wf"].astype(x.dtype)).astype(jnp.float32)
+    if state is None:
+        state = {"h": jnp.zeros((B, H, dh), jnp.float32),
+                 "c": jnp.zeros((B, H, dh), jnp.float32)}
+
+    r = p["r"]
+
+    def step(carry, inp):
+        h, c = carry
+        z_t, o_t, i_t, f_t = inp
+        zr = jnp.tanh(z_t + jnp.einsum("bhd,hde->bhe", h, r))
+        i = jax.nn.sigmoid(i_t)[..., None]
+        f = jax.nn.sigmoid(f_t + 1.0)[..., None]
+        c = f * c + i * zr
+        h = jax.nn.sigmoid(o_t) * jnp.tanh(c)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(
+        step, (state["h"], state["c"]),
+        (zs.swapaxes(0, 1), os_.swapaxes(0, 1),
+         is_.swapaxes(0, 1), fs.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    return y @ p["down"].astype(x.dtype), {"h": h, "c": c}
+
+
+def slstm_state_spec(cfg, batch: int):
+    dh = cfg.d_model // cfg.n_heads
+    return {"h": jax.ShapeDtypeStruct((batch, cfg.n_heads, dh), jnp.float32),
+            "c": jax.ShapeDtypeStruct((batch, cfg.n_heads, dh), jnp.float32)}

@@ -1,0 +1,53 @@
+"""Gradient compression for the cross-pod data-parallel all-reduce.
+
+int8 block-quantization with error feedback (EF-SGD style): the quantization
+residual is carried in the train state and added back next step, so the
+compression is unbiased in the long run. Intended for the DCN (cross-pod)
+hop where bandwidth is ~10x scarcer than ICI; within-pod reduction stays
+full-precision. Toggle via TrainConfig.grad_compress.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize(g: jnp.ndarray):
+    """g (any shape) -> (int8 blocks, fp32 scales per block)."""
+    flat, n = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale, n
+
+
+def dequantize(q, scale, n, shape):
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+def compress_with_feedback(g, err):
+    """Returns (g_compressed, new_err). err is the carried residual."""
+    target = g.astype(jnp.float32) + err
+    q, s, n = quantize(target)
+    deq = dequantize(q, s, n, g.shape)
+    return deq.astype(g.dtype), (target - deq)
+
+
+def tree_compress(grads, err_tree):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    outs = [compress_with_feedback(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)

@@ -1,0 +1,115 @@
+"""Fault-tolerant checkpointing.
+
+Design (1000+-node posture, DESIGN.md §5):
+* the state pytree is saved as flat npz shards + a JSON manifest;
+* writes go to a temp dir and are published with an atomic rename, so a
+  node failure mid-write never corrupts the latest checkpoint;
+* an async writer thread keeps checkpointing off the training critical path;
+* checkpoints are MESH-AGNOSTIC: arrays are saved logically-unsharded, and
+  `load_state` reshards onto whatever mesh/process the restart has —
+  elastic re-scaling is a load-time concern, not a save-time one.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree.flatten(state)
+    return leaves, treedef
+
+
+def save_state(state, ckpt_dir: str, step: int) -> str:
+    """Synchronous atomic save. Returns the published directory."""
+    root = pathlib.Path(ckpt_dir)
+    tmp = root / f".tmp_step_{step}"
+    final = root / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(state)
+    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(tmp / "shard_0.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "time": time.time(),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    return str(final)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget checkpoint writer (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, state, step: int):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # snapshot off-device
+
+        def _run():
+            save_state(host_state, self.ckpt_dir, step)
+            self._gc()
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(list_steps(self.ckpt_dir))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(pathlib.Path(self.ckpt_dir) / f"step_{s}",
+                          ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    root = pathlib.Path(ckpt_dir)
+    if not root.exists():
+        return []
+    out = []
+    for p in root.glob("step_*"):
+        if (p / "manifest.json").exists():  # only fully-published ckpts
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def load_state(like_state, ckpt_dir: str, step: int | None = None,
+               shardings=None):
+    """Restore into the structure of `like_state` (resharding as needed).
+
+    `like_state` may come from a DIFFERENT mesh than the save: arrays are
+    logically complete on disk, so elastic restarts just re-place them.
+    """
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step = steps[-1] if step is None else step
+    d = pathlib.Path(ckpt_dir) / f"step_{step}"
+    data = np.load(d / "shard_0.npz")
+    leaves, treedef = _flatten(like_state)
+    loaded = [data[f"a{i}"] for i in range(len(leaves))]
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        loaded = [jax.device_put(a, s) for a, s in zip(loaded, flat_sh)]
+    return treedef.unflatten(loaded), step

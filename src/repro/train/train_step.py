@@ -1,0 +1,151 @@
+"""Training step: value_and_grad over the model loss, AdamW update, iCh MoE
+capacity-scale adaptation, optional microbatch accumulation and gradient
+compression. Built to be `jax.jit`-ed with explicit in/out shardings by
+launch/dryrun.py and launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import model as M
+from ..models import moe as MOE
+from ..optim import adamw
+from ..optim import grad_compress as GC
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatch: int = 0          # 0 = no accumulation
+    grad_compress: bool = False  # int8 + error feedback on grads
+    ich_eps: float = 0.33        # MoE balancer epsilon (paper Table 2)
+    dtype: Any = jnp.bfloat16
+    cast_params_once: bool = False  # bf16-cast the param tree BEFORE the
+    # FSDP all-gathers (halves weight-gather wire + gathered traffic; §Perf)
+    bf16_params: bool = False    # store params bf16 + fp32 master in opt
+    # state — guarantees bf16 weight gathers AND bf16 grad reductions
+    # (XLA may gather-then-convert under cast_params_once; measured §Perf)
+
+
+def init_train_state(cfg, key, max_seq: int = 0, tcfg: TrainConfig = TrainConfig()):
+    params = M.init_params(cfg, key, max_seq)
+    opt = adamw.init_state(params)
+    if tcfg.bf16_params:
+        opt["master"] = params
+        params = jax.tree.map(
+            lambda t: t.astype(jnp.bfloat16) if t.dtype == jnp.float32 else t,
+            params)
+    state = {
+        "params": params,
+        "opt": opt,
+        "cap_scales": jnp.ones((M.n_moe_layers(cfg), max(cfg.n_experts, 1)),
+                               jnp.float32),
+    }
+    if tcfg.grad_compress:
+        state["grad_err"] = GC.init_error_state(params)
+    return state
+
+
+def train_state_pspecs(cfg, tp: int = 16, max_seq: int = 0,
+                       tcfg: TrainConfig = TrainConfig()):
+    pp = M.param_pspecs(cfg, tp, max_seq)
+    op = adamw.opt_pspecs(pp)
+    if tcfg.bf16_params:
+        op["master"] = jax.tree.map(lambda x: x, pp)
+    ps = {
+        "params": pp,
+        "opt": op,
+        "cap_scales": P(None, None),
+    }
+    if tcfg.grad_compress:
+        ps["grad_err"] = jax.tree.map(lambda x: x, pp)
+    return ps
+
+
+def batch_pspec(cfg, batch_axes=("data",)):
+    b = tuple(batch_axes)
+    spec = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.family == "encdec":
+        spec["frames"] = P(b, None, None)
+    if cfg.family == "vlm":
+        spec["patches"] = P(b, None, None)
+    return spec
+
+
+def make_train_step(cfg, tcfg: TrainConfig = TrainConfig(), dist=None):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def loss_for_grad(params, batch, cap_scales):
+        if tcfg.cast_params_once:
+            params = jax.tree.map(
+                lambda t: t.astype(tcfg.dtype)
+                if t.dtype == jnp.float32 else t, params)
+        loss, metrics = M.loss_fn(cfg, params, batch, cap_scales,
+                                  dist=dist, dtype=tcfg.dtype)
+        return loss, metrics
+
+    def step(state, batch):
+        caps = state["cap_scales"] if cfg.moe else None
+
+        if tcfg.microbatch > 1:
+            mb = tcfg.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def acc_step(carry, micro):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_for_grad, has_aux=True)(state["params"], micro, caps)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros((), jnp.float32)), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss_sum / mb
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for_grad, has_aux=True)(state["params"], batch, caps)
+
+        new_state = dict(state)
+        if tcfg.grad_compress:
+            grads, new_err = GC.tree_compress(grads, state["grad_err"])
+            new_state["grad_err"] = new_err
+
+        if tcfg.bf16_params:
+            master = state["opt"]["master"]
+            new_master, new_opt, opt_metrics = adamw.apply_updates(
+                master, grads, {k: v for k, v in state["opt"].items()
+                                if k != "master"}, tcfg.opt)
+            new_opt["master"] = new_master
+            new_params = jax.tree.map(
+                lambda t: t.astype(jnp.bfloat16)
+                if t.dtype == jnp.float32 else t, new_master)
+        else:
+            new_params, new_opt, opt_metrics = adamw.apply_updates(
+                state["params"], grads, state["opt"], tcfg.opt)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics.update(opt_metrics)
+
+        if cfg.moe:
+            counts = metrics.pop("counts")  # (n_moe_layers, E)
+            new_state["cap_scales"] = jax.vmap(
+                partial(MOE.ich_update_cap_scale, eps=tcfg.ich_eps)
+            )(counts, state["cap_scales"])
+        return new_state, metrics
+
+    return step

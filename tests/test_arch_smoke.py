@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (deliverable (f)): reduced same-family
+configs, one forward/train step on CPU, output shapes + no NaNs, and
+prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, reduced
+from repro.models import model as M
+
+ARCH_NAMES = list(ARCHS)
+
+
+def _batch(cfg, B=2, S=16):
+    b = {"tokens": jnp.ones((B, S), jnp.int32),
+         "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        b["patches"] = jnp.zeros((B, cfg.num_patches, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_train_step_no_nans(name):
+    cfg = reduced(get_arch(name))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    caps = jnp.ones((M.n_moe_layers(cfg), max(cfg.n_experts, 1))) if cfg.moe else None
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(cfg, params, batch, caps, dtype=jnp.float32)
+    assert jnp.isfinite(loss)
+    grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch, caps,
+                                         dtype=jnp.float32)[0])(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("name", ["olmo-1b", "qwen2-1.5b", "olmoe-1b-7b",
+                                  "zamba2-1.2b", "xlstm-350m", "whisper-small"])
+def test_decode_matches_prefill(name):
+    """decode at position S must equal a fresh prefill of S+1 tokens."""
+    cfg = reduced(get_arch(name))
+    params = M.init_params(cfg, jax.random.PRNGKey(1), max_seq=64)
+    caps = jnp.ones((M.n_moe_layers(cfg), max(cfg.n_experts, 1))) if cfg.moe else None
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab_size)
+    b_s = dict(_batch(cfg, B, S), tokens=toks[:, :S])
+    b_s1 = dict(_batch(cfg, B, S + 1), tokens=toks)
+    for b in (b_s, b_s1):
+        b.pop("labels")
+    logits_s1, _ = M.prefill(cfg, params, b_s1, caps, dtype=jnp.float32)
+    _, cache = M.prefill(cfg, params, b_s, caps, dtype=jnp.float32)
+
+    # pad attention caches to 64 slots
+    def pad(c):
+        if cfg.family in ("hybrid", "ssm"):
+            out = []
+            for kind, st in zip(cfg.block_pattern, c):
+                if kind == "A":
+                    out.append({k: jnp.pad(v, ((0, 0), (0, 64 - v.shape[1]),
+                                               (0, 0), (0, 0)))
+                                for k, v in st.items()})
+                else:
+                    out.append(st)
+            return out
+        if cfg.family == "encdec":
+            return {"self": [{k: jnp.pad(v, ((0, 0), (0, 0),
+                                             (0, 64 - v.shape[2]),
+                                             (0, 0), (0, 0)))
+                              for k, v in c["self"][0].items()}],
+                    "cross": c["cross"]}
+        return [{k: jnp.pad(v, ((0, 0), (0, 0), (0, 64 - v.shape[2]), (0, 0),
+                                (0, 0))) for k, v in seg.items()} for seg in c]
+
+    pos = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+    logits_d, _ = M.decode_step(cfg, params, toks[:, S:S + 1], pad(cache),
+                                pos, caps, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                               np.asarray(logits_s1, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_pspec_tree_matches_param_tree(name):
+    cfg = reduced(get_arch(name))
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0),
+                                                  max_seq=32))
+    pspecs = M.param_pspecs(cfg, tp=2, max_seq=32)
+    # same treedef => in_shardings always line up
+    assert (jax.tree.structure(params)
+            == jax.tree.structure(pspecs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec)))
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (brief ARCHITECTURES block)."""
+    c = get_arch("glm4-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 2, 13696, 151552)
+    c = get_arch("olmoe-1b-7b")
+    assert (c.n_experts, c.experts_per_token, c.moe_d_ff) == (64, 8, 1024)
+    c = get_arch("deepseek-moe-16b")
+    assert (c.n_experts, c.experts_per_token, c.n_shared_experts) == (64, 6, 2)
+    c = get_arch("zamba2-1.2b")
+    assert c.ssm_state == 64 and c.block_pattern.count("A") == 6
+    c = get_arch("phi3-medium-14b")
+    assert (c.n_heads, c.n_kv_heads, c.d_ff) == (40, 10, 17920)
+    c = get_arch("whisper-small")
+    assert c.encoder_layers == 12 and c.vocab_size == 51865
+    c = get_arch("qwen2-1.5b")
+    assert c.qkv_bias and c.n_kv_heads == 2
+
+
+def test_long_500k_support_matrix():
+    long = SHAPES["long_500k"]
+    runs = {n for n, c in ARCHS.items() if c.supports(long)}
+    assert runs == {"zamba2-1.2b", "xlstm-350m"}
+
+
+def test_param_count_analytic_vs_actual():
+    for name in ("olmo-1b", "qwen2-1.5b", "olmoe-1b-7b"):
+        cfg = reduced(get_arch(name))
+        shapes = jax.eval_shape(lambda c=cfg: M.init_params(
+            c, jax.random.PRNGKey(0), max_seq=32))
+        actual = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.12, (name, actual, analytic)

@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.ich_spmv.ich_spmv import ich_spmv, ich_tile_width, pack_tiles
+from repro.kernels.ich_spmv.ref import spmv_ref, tiles_ref
+from repro.kernels.ich_spmv.ops import IChSpmv
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan
+from repro.kernels.mamba_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("B,S,Hq,Hkv,dh", [
+    (1, 64, 2, 2, 64),
+    (2, 128, 4, 2, 64),
+    (1, 256, 8, 8, 128),
+    (2, 192, 6, 3, 64),
+    (1, 512, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, Hq, Hkv, dh, dtype):
+    q = jnp.array(RNG.standard_normal((B, S, Hq, dh)), dtype)
+    k = jnp.array(RNG.standard_normal((B, S, Hkv, dh)), dtype)
+    v = jnp.array(RNG.standard_normal((B, S, Hkv, dh)), dtype)
+    out = flash_attention(q, k, v, causal=True, q_block=64, kv_block=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    q = jnp.array(RNG.standard_normal((2, 128, 4, 64)), jnp.float32)
+    k = jnp.array(RNG.standard_normal((2, 128, 4, 64)), jnp.float32)
+    v = jnp.array(RNG.standard_normal((2, 128, 4, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, q_block=64, kv_block=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_op_pads_ragged_seq():
+    q = jnp.array(RNG.standard_normal((1, 100, 4, 64)), jnp.float32)
+    k = jnp.array(RNG.standard_normal((1, 100, 2, 64)), jnp.float32)
+    v = jnp.array(RNG.standard_normal((1, 100, 2, 64)), jnp.float32)
+    out = flash_attention_op(q, k, v, q_block=32, kv_block=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------------------------------------------ ich_spmv
+def _random_csr(n, zipf_a, seed=0, max_nnz=300):
+    rng = np.random.default_rng(seed)
+    row_nnz = np.minimum(rng.zipf(zipf_a, n), max_nnz)
+    indptr = np.concatenate([[0], np.cumsum(row_nnz)]).astype(np.int64)
+    nnz = int(indptr[-1])
+    indices = rng.integers(0, n, nnz).astype(np.int32)
+    data = rng.standard_normal(nnz).astype(np.float32)
+    return indptr, indices, data
+
+
+@pytest.mark.parametrize("n,zipf_a,R", [(100, 1.6, 4), (256, 1.9, 8),
+                                        (333, 2.5, 8), (64, 1.3, 16)])
+def test_ich_spmv_sweep(n, zipf_a, R):
+    indptr, indices, data = _random_csr(n, zipf_a, seed=n)
+    x = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    vals, cols, rowid, W = pack_tiles(indptr, indices, data, rows_per_tile=R)
+    y_ref = spmv_ref(indptr, indices, data, x)
+    # packing oracle (isolates schedule-construction bugs)
+    np.testing.assert_allclose(tiles_ref(vals, cols, rowid, x, n), y_ref,
+                               atol=1e-4, rtol=1e-4)
+    y = ich_spmv(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(rowid),
+                 jnp.asarray(x), n, interpret=True)
+    np.testing.assert_allclose(y, y_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ich_tile_width_band_logic():
+    # W = pow2(mu*(1+eps)): uniform-32 rows fit one segment (64 >= 42.6);
+    # small-row inputs clamp to min_w; always a power of two in [8, 512]
+    assert ich_tile_width(np.full(1000, 32)) == 64
+    assert ich_tile_width(np.full(1000, 2)) == 8
+    w_hvy = ich_tile_width(np.minimum(np.random.default_rng(0).zipf(1.5, 1000), 5000))
+    assert w_hvy in {8, 16, 32, 64, 128, 256, 512}
+    # monotone in eps (wider band -> wider tiles)
+    rows = np.random.default_rng(1).integers(1, 100, 500)
+    assert ich_tile_width(rows, eps=0.5) >= ich_tile_width(rows, eps=0.25)
+
+
+def test_ich_spmv_ops_wrapper():
+    indptr, indices, data = _random_csr(128, 1.8, seed=7)
+    op = IChSpmv(indptr, indices, data)
+    x = jnp.array(np.random.default_rng(2).standard_normal(128), jnp.float32)
+    np.testing.assert_allclose(op(x, interpret=True),
+                               spmv_ref(indptr, indices, data, x),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ich_spmv_empty_rows():
+    indptr = np.array([0, 0, 3, 3, 5], np.int64)  # rows 0 and 2 empty
+    indices = np.array([0, 1, 2, 1, 3], np.int32)
+    data = np.ones(5, np.float32)
+    x = jnp.arange(4, dtype=jnp.float32) + 1.0
+    vals, cols, rowid, _ = pack_tiles(indptr, indices, data, rows_per_tile=4)
+    y = ich_spmv(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(rowid),
+                 x, 4, interpret=True)
+    np.testing.assert_allclose(y, spmv_ref(indptr, indices, data, x), atol=1e-6)
+
+
+# ---------------------------------------------------------------- mamba_scan
+@pytest.mark.parametrize("B,S,H,N,Pd,chunk", [
+    (1, 128, 2, 16, 32, 64),
+    (2, 256, 3, 16, 32, 64),
+    (1, 256, 1, 64, 64, 128),
+    (2, 128, 4, 8, 16, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan_sweep(B, S, H, N, Pd, chunk, dtype):
+    q = jnp.array(RNG.standard_normal((B, S, H, N)), dtype)
+    k = jnp.array(RNG.standard_normal((B, S, H, N)), dtype)
+    v = jnp.array(RNG.standard_normal((B, S, H, Pd)), dtype)
+    la = jnp.array(-np.abs(RNG.standard_normal((B, S, H))) * 0.2, jnp.float32)
+    y, s = mamba_scan(q, k, v, la, chunk=chunk, interpret=True)
+    y_ref, s_ref = ssd_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), la, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=_tol(dtype) * 10, rtol=_tol(dtype) * 10)
+    np.testing.assert_allclose(s, s_ref, atol=_tol(dtype) * 10,
+                               rtol=_tol(dtype) * 10)
+
+
+def test_mamba_scan_matches_sequential():
+    """End-to-end: kernel vs the plain sequential recurrence."""
+    B, S, H, N, Pd = 1, 64, 2, 8, 16
+    q = np.asarray(RNG.standard_normal((B, S, H, N)), np.float32)
+    k = np.asarray(RNG.standard_normal((B, S, H, N)), np.float32)
+    v = np.asarray(RNG.standard_normal((B, S, H, Pd)), np.float32)
+    la = -np.abs(RNG.standard_normal((B, S, H))).astype(np.float32) * 0.3
+    St = np.zeros((B, H, Pd, N))
+    ys = []
+    for t in range(S):
+        a = np.exp(la[:, t])[:, :, None, None]
+        St = St * a + np.einsum("bhn,bhp->bhpn", k[:, t], v[:, t])
+        ys.append(np.einsum("bhn,bhpn->bhp", q[:, t], St))
+    y_ref = np.stack(ys, 1)
+    y, s = mamba_scan(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                      jnp.asarray(la), chunk=32, interpret=True)
+    np.testing.assert_allclose(y, y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s, St.swapaxes(-1, -2), atol=1e-4, rtol=1e-4)

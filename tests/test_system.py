@@ -1,0 +1,213 @@
+"""End-to-end system tests: trainer (checkpoint/restart/failure), serving
+engine (iCh chunked prefill), MoE balancer, optimizer, gradient compression,
+data pipeline, cost model, and HLO collective parsing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_arch, reduced
+from repro.core import welford as W
+from repro.data.pipeline import IChDataDispatcher, synthetic_tokens
+from repro.launch import hlo_stats
+from repro.launch.costmodel import MeshShape, cell_cost
+from repro.models import model as M
+from repro.models import moe as MOE
+from repro.optim import adamw
+from repro.optim import grad_compress as GC
+from repro.serve.engine import Engine, EngineConfig
+from repro.train import checkpoint as CKPT
+from repro.train import train_step as TS
+from repro.train.trainer import InjectedFailure, RunConfig, train
+
+
+# ------------------------------------------------------------------ trainer
+def test_trainer_checkpoint_restart_and_loss_decreases(tmp_path):
+    cfg = reduced(get_arch("olmo-1b"))
+    run = RunConfig(steps=14, batch=4, seq=32, ckpt_dir=str(tmp_path),
+                    ckpt_every=5, failure_at=7, log_every=100)
+    with pytest.raises(InjectedFailure):
+        train(cfg, run, verbose=False)
+    assert CKPT.list_steps(str(tmp_path)) == [5]
+    state, losses = train(cfg, dataclasses.replace(run, failure_at=None),
+                          verbose=False)
+    assert len(losses) == 9  # resumed from step 5
+    full_run = RunConfig(steps=14, batch=4, seq=32,
+                         ckpt_dir=str(tmp_path / "fresh"), log_every=100)
+    _, fresh_losses = train(cfg, full_run, verbose=False)
+    assert fresh_losses[-1] < fresh_losses[0]  # learning happens
+
+
+def test_trainer_moe_cap_scales_update(tmp_path):
+    cfg = reduced(get_arch("olmoe-1b-7b"))
+    run = RunConfig(steps=3, batch=4, seq=32, ckpt_dir=str(tmp_path),
+                    ckpt_every=100, log_every=100)
+    state, _ = train(cfg, run, verbose=False)
+    assert state["cap_scales"].shape == (cfg.n_layers, cfg.n_experts)
+    assert bool(jnp.isfinite(state["cap_scales"]).all())
+
+
+def test_checkpoint_is_mesh_agnostic(tmp_path):
+    cfg = reduced(get_arch("olmo-1b"))
+    tcfg = TS.TrainConfig()
+    state = TS.init_train_state(cfg, jax.random.PRNGKey(0), 32, tcfg)
+    CKPT.save_state(state, str(tmp_path), 7)
+    like = TS.init_train_state(cfg, jax.random.PRNGKey(1), 32, tcfg)
+    loaded, step = CKPT.load_state(like, str(tmp_path))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_master_training_state():
+    cfg = reduced(get_arch("olmo-1b"))
+    tcfg = TS.TrainConfig(bf16_params=True)
+    state = TS.init_train_state(cfg, jax.random.PRNGKey(0), 32, tcfg)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(state["params"]))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(state["opt"]["master"]))
+    step = TS.make_train_step(cfg, tcfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_tokens(4, 32, cfg.padded_vocab, 0).items()}
+    state2, metrics = jax.jit(step)(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    # params stayed bf16 and actually moved
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(state2["params"]))
+
+
+# ------------------------------------------------------------------ serving
+def test_engine_generates_and_adapts():
+    cfg = reduced(get_arch("olmo-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_seq=256)
+    eng = Engine(cfg, params, EngineConfig(max_seq=160, min_chunk=8,
+                                           init_divisor=4.0))
+    prompts = np.random.default_rng(0).integers(1, 400, (2, 64)).astype(np.int32)
+    out, stats = eng.generate(prompts, n_new=4)
+    assert out.shape == (2, 4)
+    assert len(stats["chunks"]) >= 2  # chunked prefill happened
+    # every chunk respects min_chunk except the final remainder
+    assert all(e["chunk"] >= 8 for e in stats["chunks"][:-1])
+    assert sum(e["chunk"] for e in stats["chunks"]) == 64
+
+
+# ---------------------------------------------------------------- MoE / iCh
+def test_moe_steal_reduces_drops_under_skew():
+    cfg = reduced(get_arch("olmoe-1b-7b"))
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    p["router"] = p["router"].at[:, 0].add(3.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, cfg.d_model))
+    cap = jnp.ones((cfg.n_experts,))
+    _, a_ns = MOE.moe_local(cfg, p, x, cap, steal=False, capacity_factor=1.0)
+    _, a_st = MOE.moe_local(cfg, p, x, cap, steal=True, capacity_factor=1.0)
+    assert float(a_st["dropped"]) <= float(a_ns["dropped"])
+
+
+def test_ich_cap_scale_conserves_budget_and_bounds():
+    counts = jnp.asarray(np.random.default_rng(0).exponential(100, 64))
+    cap = jnp.ones((64,))
+    for _ in range(10):
+        cap = MOE.ich_update_cap_scale(counts, cap)
+    assert float(cap.sum()) <= 64.0 + 1e-3
+    assert float(cap.min()) >= 0.25 and float(cap.max()) <= 2.0
+
+
+# ------------------------------------------------------------------- optim
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=200)
+    state = adamw.init_state(params)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_compression_error_feedback_is_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(2000) * 0.01)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        cg, err = GC.compress_with_feedback(g, err)
+        acc = acc + cg
+    # accumulated compressed grads track accumulated true grads
+    np.testing.assert_allclose(acc / 50, g, atol=2e-4)
+
+
+# ------------------------------------------------------------------- data
+def test_ich_data_dispatcher_exactly_once():
+    hits = np.zeros(500, np.int64)
+    import threading
+    lock = threading.Lock()
+
+    def read(i):
+        with lock:
+            hits[i] += 1
+
+    stats = IChDataDispatcher(n_hosts=4).ingest(500, read)
+    assert (hits == 1).all()
+    assert stats.chunks > 4
+
+
+# --------------------------------------------------------------- cost model
+def test_costmodel_terms_positive_and_levers_act():
+    cfg = get_arch("olmoe-1b-7b")
+    shape = SHAPES["train_4k"]
+    base = cell_cost(cfg, shape, MeshShape())
+    assert all(v > 0 for v in base.terms().values())
+    opt = cell_cost(dataclasses.replace(cfg, moe_cmax_factor=1.25), shape,
+                    MeshShape(), bf16_gather=True, causal_skip=True)
+    assert opt.flops < base.flops
+    assert opt.wire_bytes < base.wire_bytes
+    # decode serve-opt removes the FSDP gathers
+    d = SHAPES["decode_32k"]
+    db = cell_cost(get_arch("phi3-medium-14b"), d, MeshShape())
+    do = cell_cost(get_arch("phi3-medium-14b"), d, MeshShape(), decode_fsdp=False)
+    assert do.wire_bytes < db.wire_bytes / 100
+
+
+def test_hlo_collective_parser():
+    txt = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[512]{0} all-reduce(%p1), replica_groups=[4,2]<=[8]
+  %rs = f32[128]{0} reduce-scatter(%p2), replica_groups={{0,1}}, dimensions={0}
+"""
+    st = hlo_stats.parse_collectives(txt)
+    assert st.by_kind["all-gather"][0] == 1
+    assert st.by_kind["all-gather"][1] == 16 * 1024 * 2
+    assert st.by_kind["all-gather"][2] == 16 * 1024 * 2 / 4  # operand
+    assert st.by_kind["all-reduce"][1] == 512 * 4
+    assert st.by_kind["reduce-scatter"][2] == 128 * 4 * 2
+
+
+# ------------------------------------------------------------- welford/iCh
+def test_welford_band_monotone_in_eps():
+    ks = np.asarray([5.0, 10.0, 20.0, 40.0])
+    _, d1 = W.ich_band(ks, 0.25)
+    _, d2 = W.ich_band(ks, 0.50)
+    assert d2 > d1
+
+
+# ---------------------------------------------------------------- dry-run
+def test_dryrun_cell_subprocess(tmp_path):
+    """One real dry-run cell end-to-end in a fresh process (the 512-device
+    XLA flag must be set before jax import, so this cannot run in-process)."""
+    import json
+    import pathlib
+    import subprocess
+    import sys
+
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "decode_32k", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=str(pathlib.Path(__file__).resolve().parents[1]))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads((tmp_path / "olmo-1b_decode_32k_16x16.json").read_text())
+    assert rec["status"] == "OK"
+    assert rec["cost"]["flops"] > 0
+    assert rec["memory"]["temp_bytes"] > 0
