@@ -12,9 +12,18 @@ from .policies import (
     ich_chunk,
     ich_initial_d,
     paper_policy_grid,
+    pretiled,
     static,
     stealing,
     taskloop,
+)
+from .tiling import (
+    TileSchedule,
+    build_schedule,
+    coverage_counts,
+    ich_tile_width,
+    pack_csr,
+    split_items,
 )
 from .simulator import (
     SimParams,
@@ -30,7 +39,10 @@ from .executor import parallel_for, ExecStats
 
 __all__ = [
     "Policy", "binlpt", "dynamic", "guided", "ich", "ich_chunk",
-    "ich_initial_d", "paper_policy_grid", "static", "stealing", "taskloop",
+    "ich_initial_d", "paper_policy_grid", "pretiled", "static", "stealing",
+    "taskloop",
+    "TileSchedule", "build_schedule", "coverage_counts", "ich_tile_width",
+    "pack_csr", "split_items",
     "SimParams", "SimResult", "best_time_over_grid", "eps_sensitivity",
     "simulate", "speedup", "worst_stealing",
     "Welford", "adapt_d", "classify", "ich_band", "steal_merge",

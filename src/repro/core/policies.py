@@ -33,9 +33,10 @@ class Policy:
     # distributed-queue parameters
     adaptive: bool = False  # True only for iCh
     eps: float = 0.25  # iCh epsilon (paper: 25%, 33%, 50%)
-    # pretiled chunk policies (taskloop / binlpt / static)
+    # pretiled chunk policies (taskloop / binlpt / static / pretiled)
     num_tasks: Optional[int] = None  # taskloop: num_tasks = p
     binlpt_chunks: Optional[int] = None  # binlpt: max number of chunks
+    explicit: Optional[tuple] = None  # pretiled: ((begin, end), ...)
 
     def label(self) -> str:
         if self.name == "ich":
@@ -44,8 +45,8 @@ class Policy:
             return "taskloop"
         if self.name == "binlpt":
             return f"binlpt({self.binlpt_chunks})"
-        if self.law == "fixed" or self.name == "stealing":
-            return f"{self.name}({self.chunk})"
+        if self.name == "pretiled":
+            return f"pretiled({len(self.explicit or ())})"
         return f"{self.name}({self.chunk})"
 
 
@@ -79,6 +80,15 @@ def static() -> Policy:
     return Policy("static", CENTRAL, law="pretiled", num_tasks=-1)
 
 
+def pretiled(chunks) -> Policy:
+    """Explicit central-queue chunk list, e.g. an iCh-constructed tile
+    schedule's `slot_ranges()` — lets the simulator replay a schedule built
+    by `core.tiling` chunk-for-chunk (the kernel/simulator cross-check in
+    benchmarks/bench_ich_kernels.py)."""
+    return Policy("pretiled", CENTRAL, law="pretiled",
+                  explicit=tuple((int(b), int(e)) for b, e in chunks))
+
+
 def stealing(chunk: int = 1) -> Policy:
     """Generic work-stealing with fixed chunk (paper's base algorithm)."""
     return Policy("stealing", DISTRIBUTED, chunk=chunk, adaptive=False)
@@ -104,6 +114,8 @@ def pretile(policy: Policy, costs: np.ndarray, p: int) -> list[tuple[int, int]]:
     Returns [(begin, end), ...] in the order workers will be offered them.
     """
     n = len(costs)
+    if policy.explicit is not None:
+        return [(int(b), int(e)) for b, e in policy.explicit]
     if policy.name in ("taskloop", "static"):
         k = p if (policy.num_tasks is None or policy.num_tasks < 0) else policy.num_tasks
         k = max(1, min(k, n))

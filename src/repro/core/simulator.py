@@ -57,6 +57,9 @@ class SimResult:
     ks: Optional[np.ndarray] = None
     ds: Optional[np.ndarray] = None
     assignment: Optional[np.ndarray] = None  # per-iteration worker id
+    # per-dispatched-chunk records (begin, end, worker, work), in dispatch
+    # order; filled when simulate(..., record_chunks=True)
+    chunk_log: Optional[list] = None
 
     @property
     def efficiency(self) -> float:
@@ -78,6 +81,7 @@ def simulate(
     params: SimParams = SimParams(),
     record_assignment: bool = False,
     estimate: np.ndarray = None,
+    record_chunks: bool = False,
 ) -> SimResult:
     """`estimate` is the workload estimate HANDED to workload-aware policies
     (binlpt); defaults to the true costs. Passing a stale estimate models
@@ -86,6 +90,8 @@ def simulate(
     n = len(costs)
     csum = np.concatenate([[0.0], np.cumsum(costs)])
     res = SimResult(0.0, n, p, policy.label())
+    if record_chunks:
+        res.chunk_log = []
     if n == 0:
         return res
     speeds = _speeds(p, params)
@@ -135,6 +141,8 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
                 tw += grab_cost + work / speeds[w]
                 if assignment is not None:
                     assignment[b:e] = w
+                if res.chunk_log is not None:
+                    res.chunk_log.append((b, e, w, work))
                 res.chunks += 1
                 res.busy += work / speeds[w]
                 res.overhead += grab_cost
@@ -176,6 +184,8 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
         work = csum[e] - csum[b]
         if assignment is not None:
             assignment[b:e] = w
+        if res.chunk_log is not None:
+            res.chunk_log.append((b, e, w, work))
         done = start + grab_cost + work / speeds[w]
         res.chunks += 1
         res.busy += work / speeds[w]
@@ -250,6 +260,8 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
             work = csum[e] - csum[b]
             if assignment is not None:
                 assignment[b:e] = w
+            if res.chunk_log is not None:
+                res.chunk_log.append((b, e, w, work))
             done = start + params.local_dispatch_overhead + work / speeds[w]
             res.chunks += 1
             res.busy += work / speeds[w]

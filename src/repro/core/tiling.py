@@ -1,0 +1,189 @@
+"""iCh schedule construction: the paper's band heuristic as a tiling layer.
+
+On a TPU the grid of a `pallas_call` is static, so iCh's *runtime* chunk
+adaptation becomes *schedule construction* on the host (DESIGN.md §2): given
+per-item work sizes (nnz per CSR row, frontier degree per vertex, predicted
+cost per K-Means point), we
+
+1. pick a tile width W with the paper's variance band (eqs. 1-3, 8):
+   W = pow2-roundup of mu * (1 + eps), so every "normal"-classified item fits
+   in one segment (`ich_tile_width`);
+2. split items wider than W into W-sized segments (`split_items`) — the
+   work-stealing analogue: a heavy item's overflow migrates to later tiles
+   exactly like stolen iterations;
+3. greedily pack segments, in order, into fixed-shape tiles of R segment
+   slots each (`build_schedule`), yielding a `TileSchedule` whose
+   `item_id` array is the scalar-prefetch schedule a kernel consumes.
+
+Every kernel under `repro/kernels/ich_*` builds its schedule here; `pack_csr`
+additionally gathers CSR payloads into the (T, R, W) layout. The schedule is
+cross-checkable against the discrete-event simulator: `slot_ranges()` maps
+tiles to contiguous chunks in flattened work-unit space, which can be handed
+to `simulate(..., policies.pretiled(ranges), record_chunks=True)` — the
+simulator's per-chunk work must equal `tile_cost` (see
+benchmarks/bench_ich_kernels.py and tests/test_tiling.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def ich_tile_width(sizes: np.ndarray, eps: float = 0.33,
+                   min_w: int = 8, max_w: int = 512) -> int:
+    """Pick the tile width with the paper's band (eqs. 1-3, 8).
+
+    W = the band's UPPER edge mu*(1+eps), rounded up to a power of two:
+    every "normal"-classified item (within mu +- eps*mu) fits in one segment;
+    only "high" items split across tiles — the work-stealing analogue (their
+    overflow migrates to later tiles). A multiplicative walk (adapt_d per
+    chunk) has no equilibrium on a static distribution — measured in
+    benchmarks/bench_ich_spmv.py — so schedule construction uses the band
+    directly; the runtime walk remains correct where k_i is cumulative
+    (simulator/executor/serving).
+    """
+    mu = float(np.mean(sizes))
+    upper = mu * (1.0 + eps)
+    w = 2 ** int(np.ceil(np.log2(max(upper, 1.0))))
+    return int(min(max(w, min_w), max_w))
+
+
+def split_items(sizes: np.ndarray, width: int) -> list[tuple[int, int, int]]:
+    """Cut items into width-W segments: [(item, start_in_item, length), ...].
+
+    Segments are emitted in item order; a zero-size item still emits one
+    zero-length segment so every item owns at least one slot (kernels rely on
+    this to e.g. zero an empty CSR row's output).
+    """
+    segs: list[tuple[int, int, int]] = []
+    for i, size in enumerate(np.asarray(sizes)):
+        size = int(size)
+        for s in range(0, max(size, 1), width):
+            segs.append((i, s, min(width, size - s) if size else 0))
+    return segs
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSchedule:
+    """An iCh-constructed static schedule: T tiles x R segment slots.
+
+    `item_id[t, j]` is the item whose segment occupies slot (t, j), or -1 for
+    a padding slot; `seg_start`/`seg_len` locate the segment within the item
+    (in work units: nonzeros, edges, cost quanta). `item_id` is what a kernel
+    prefetches to SMEM as its scatter/gather schedule.
+    """
+
+    item_id: np.ndarray    # (T, R) int32, -1 = padding slot
+    seg_start: np.ndarray  # (T, R) int32
+    seg_len: np.ndarray    # (T, R) int32
+    width: int             # W: work-unit capacity of one slot
+    n_items: int
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.item_id.shape[0])
+
+    @property
+    def rows_per_tile(self) -> int:
+        return int(self.item_id.shape[1])
+
+    def tile_work(self) -> np.ndarray:
+        """Work units (e.g. nonzeros) packed into each tile, shape (T,)."""
+        return self.seg_len.sum(axis=1).astype(np.int64)
+
+    def tile_cost(self, costs: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+        """Per-tile cost when item i's cost is spread evenly over its
+        `sizes[i]` work units (zero-size items carry no units). This is the
+        quantity the discrete-event simulator must reproduce chunk-by-chunk
+        for the pretiled schedule — see `slot_ranges`."""
+        costs = np.asarray(costs, np.float64)
+        sizes = np.asarray(sizes, np.float64)
+        unit = np.divide(costs, sizes, out=np.zeros_like(costs),
+                         where=sizes > 0)
+        per_slot = np.where(self.item_id >= 0,
+                            unit[np.clip(self.item_id, 0, self.n_items - 1)],
+                            0.0)
+        return (per_slot * self.seg_len).sum(axis=1)
+
+    def slot_ranges(self) -> np.ndarray:
+        """(T, 2) [begin, end) chunks in flattened work-unit space.
+
+        Greedy packing keeps segments in item order, so each tile covers a
+        contiguous run of work units — i.e. the schedule IS a pretiled
+        central-queue chunking, directly consumable by
+        `simulate(unit_costs, p, policies.pretiled(ranges))`.
+        """
+        cum = np.concatenate([[0], np.cumsum(self.seg_len.reshape(-1))])
+        bounds = cum[::self.rows_per_tile]  # len T*R+1 strided by R -> T+1
+        return np.stack([bounds[:-1], bounds[1:]], axis=1).astype(np.int64)
+
+    def unit_costs(self, costs: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+        """Expand per-item costs to the flattened work-unit cost array that
+        `slot_ranges` indexes into (item i -> sizes[i] units of equal cost)."""
+        costs = np.asarray(costs, np.float64)
+        sizes = np.asarray(sizes, np.int64)
+        unit = np.divide(costs, sizes, out=np.zeros_like(costs),
+                         where=sizes > 0)
+        return np.repeat(unit, sizes)
+
+
+def build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
+                   width: int | None = None, eps: float = 0.33,
+                   min_w: int = 8, max_w: int = 512) -> TileSchedule:
+    """Band -> W -> segments -> greedy packing into (T, R) slots."""
+    sizes = np.asarray(sizes)
+    if sizes.size == 0:
+        raise ValueError("cannot build a schedule from an empty sizes array")
+    W = int(width) if width else ich_tile_width(sizes, eps, min_w, max_w)
+    R = int(rows_per_tile)
+    segs = split_items(sizes, W)
+    T = -(-len(segs) // R)
+    item_id = np.full((T, R), -1, np.int32)
+    seg_start = np.zeros((T, R), np.int32)
+    seg_len = np.zeros((T, R), np.int32)
+    for i, (item, s, ln) in enumerate(segs):
+        t, j = divmod(i, R)
+        item_id[t, j] = item
+        seg_start[t, j] = s
+        seg_len[t, j] = ln
+    return TileSchedule(item_id, seg_start, seg_len, W, len(sizes))
+
+
+def pack_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
+             schedule: TileSchedule) -> tuple[np.ndarray, np.ndarray]:
+    """Gather CSR payloads into the schedule's (T, R, W) layout.
+
+    Returns (vals, cols); padding slots/tails are zero, so sum-reductions
+    over W need no masking (and vals doubles as a validity mask when the
+    payload is all-ones, as in BFS).
+    """
+    T, R, W = schedule.n_tiles, schedule.rows_per_tile, schedule.width
+    vals = np.zeros((T, R, W), data.dtype)
+    cols = np.zeros((T, R, W), np.int32)
+    for t in range(T):
+        for j in range(R):
+            item, s, ln = (int(schedule.item_id[t, j]),
+                           int(schedule.seg_start[t, j]),
+                           int(schedule.seg_len[t, j]))
+            if item >= 0 and ln > 0:
+                base = int(indptr[item]) + s
+                vals[t, j, :ln] = data[base:base + ln]
+                cols[t, j, :ln] = indices[base:base + ln]
+    return vals, cols
+
+
+def coverage_counts(schedule: TileSchedule, sizes: np.ndarray) -> np.ndarray:
+    """How many times each item's work units appear in the schedule; a valid
+    schedule covers every unit exactly once (tests/test_tiling.py)."""
+    sizes = np.asarray(sizes, np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    counts = np.zeros(int(offsets[-1]), np.int64)
+    for t in range(schedule.n_tiles):
+        for j in range(schedule.rows_per_tile):
+            item = int(schedule.item_id[t, j])
+            ln = int(schedule.seg_len[t, j])
+            if item >= 0 and ln > 0:
+                b = int(offsets[item]) + int(schedule.seg_start[t, j])
+                counts[b:b + ln] += 1
+    return counts

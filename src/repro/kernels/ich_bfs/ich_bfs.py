@@ -1,0 +1,71 @@
+"""iCh-scheduled BFS frontier expansion — the paper's BF application on TPU.
+
+Pull-direction (bottom-up) level step over a CSR graph whose row u lists u's
+in-neighbors: vertex u joins the next frontier iff some in-neighbor is on the
+current frontier and u is unvisited. Per-vertex cost = degree, the paper's
+BFS workload (§5.1): most vertices are trivial, frontier-adjacent ones heavy.
+
+The schedule is constructed once per graph by `core.tiling` (DESIGN.md §2):
+band-picked width W over the degree distribution, heavy adjacency lists
+split across W-wide segments, segments greedily packed into (T, R) slots.
+`mask` is the all-ones CSR payload from `pack_csr` — 1.0 on real edge slots,
+0.0 on padding — so a padded slot can never observe frontier[cols==0].
+
+Kernel per level: persistent grid (T,); each step gathers frontier[cols]
+(R, W), reduces with max over W, and max-accumulates into the per-vertex
+output (split rows OR together across tiles), masked by `visited`. Grid
+steps run sequentially on a TPU core, so read-modify-write is safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bfs_kernel(rowid_ref, mask_ref, cols_ref, frontier_ref, visited_ref,
+                out_ref, *, n_vertices: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mask = mask_ref[0]      # (R, W) 1.0 on real edge slots
+    cols = cols_ref[0]      # (R, W) in-neighbor ids
+    frontier = frontier_ref[...]  # (n,) 1.0 = on current frontier
+    visited = visited_ref[...]    # (n,) 1.0 = already visited
+    hit = jnp.max(mask * frontier[cols], axis=1)  # (R,) any frontier nbr?
+    rows = rowid_ref[t]     # (R,) SMEM scalars: vertex per slot, -1 pad
+    for j in range(rows.shape[0]):
+        r = jnp.clip(rows[j], 0, n_vertices - 1)
+        inc = jnp.where(rows[j] >= 0, hit[j] * (1.0 - visited[r]), 0.0)
+        out_ref[r] = jnp.maximum(out_ref[r], inc)
+
+
+def ich_bfs_step(mask, cols, rowid, frontier, visited, n_vertices: int,
+                 *, interpret: bool = False):
+    """One frontier expansion. mask/cols (T,R,W); rowid (T,R); frontier and
+    visited (n,) float32 indicators. Returns the next frontier (n,)."""
+    T, R, W = mask.shape
+    kernel = functools.partial(_bfs_kernel, n_vertices=n_vertices)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # rowid prefetched to SMEM (the schedule)
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, R, W), lambda t, rowid: (t, 0, 0)),
+            pl.BlockSpec((1, R, W), lambda t, rowid: (t, 0, 0)),
+            pl.BlockSpec(frontier.shape, lambda t, rowid: (0,)),
+            pl.BlockSpec(visited.shape, lambda t, rowid: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_vertices,), lambda t, rowid: (0,)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_vertices,), frontier.dtype),
+        interpret=interpret,
+    )(rowid, mask, cols, frontier, visited)

@@ -1,0 +1,64 @@
+"""Public wrapper: pack the graph once (iCh schedule construction), then run
+frontier expansions / full traversals many times."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import build_schedule, pack_csr
+
+from .ich_bfs import ich_bfs_step
+
+
+class IChBfs:
+    """CSR graph (rows = in-neighbor lists) packed into iCh work tiles.
+
+    The degree array is the per-vertex cost the paper's BFS workload
+    exposes; the schedule (width, splitting, packing) is built from it once
+    and reused for every level of every traversal.
+    """
+
+    def __init__(self, indptr, indices, *, rows_per_tile: int = 8,
+                 eps: float = 0.33, width: int = None):
+        indptr = np.asarray(indptr)
+        indices = np.asarray(indices)
+        self.n = len(indptr) - 1
+        self.schedule = build_schedule(np.diff(indptr),
+                                       rows_per_tile=rows_per_tile,
+                                       width=width, eps=eps)
+        mask, cols = pack_csr(indptr, indices,
+                              np.ones(len(indices), np.float32),
+                              self.schedule)
+        self.mask = jnp.asarray(mask)
+        self.cols = jnp.asarray(cols)
+        self.rowid = jnp.asarray(self.schedule.item_id)
+        self._jitted = {}  # interpret mode -> jitted step (compile once)
+
+    def step(self, frontier, visited, interpret: bool | None = None):
+        """One frontier expansion; indicator in, indicator out."""
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_bfs_step, n_vertices=self.n, interpret=interpret))
+        return self._jitted[interpret](self.mask, self.cols, self.rowid,
+                                       jnp.asarray(frontier, jnp.float32),
+                                       jnp.asarray(visited, jnp.float32))
+
+    def levels(self, source: int = 0,
+               interpret: bool | None = None) -> np.ndarray:
+        """Full traversal: level per vertex (-1 = unreached)."""
+        level = np.full(self.n, -1, np.int32)
+        level[source] = 0
+        frontier = np.zeros(self.n, np.float32)
+        frontier[source] = 1.0
+        visited = frontier.copy()
+        depth = 0
+        while frontier.any():
+            nxt = np.asarray(self.step(frontier, visited, interpret))
+            depth += 1
+            level[nxt > 0] = depth
+            visited = np.maximum(visited, nxt)
+            frontier = nxt
+        return level

@@ -1,0 +1,31 @@
+"""Pure-numpy oracles for the iCh-scheduled BFS kernel."""
+import numpy as np
+
+
+def bfs_step_ref(indptr, indices, frontier, visited):
+    """Pull-direction expansion: u joins iff some in-neighbor (row u of the
+    CSR) is on the frontier and u is unvisited. Indicators are float arrays
+    to mirror the kernel's interface."""
+    n = len(indptr) - 1
+    seg = np.repeat(np.arange(n), np.diff(indptr))
+    hit = np.zeros(n)
+    np.maximum.at(hit, seg, np.asarray(frontier)[np.asarray(indices)])
+    return (hit * (1.0 - np.asarray(visited))).astype(np.float32)
+
+
+def bfs_levels_ref(indptr, indices, source: int = 0) -> np.ndarray:
+    """Level per vertex (-1 = unreached) under pull-direction BFS."""
+    n = len(indptr) - 1
+    level = np.full(n, -1, np.int32)
+    level[source] = 0
+    frontier = np.zeros(n, np.float32)
+    frontier[source] = 1.0
+    visited = frontier.copy()
+    depth = 0
+    while frontier.any():
+        nxt = bfs_step_ref(indptr, indices, frontier, visited)
+        depth += 1
+        level[nxt > 0] = depth
+        visited = np.maximum(visited, nxt)
+        frontier = nxt
+    return level

@@ -1,0 +1,67 @@
+"""iCh-scheduled K-Means assignment — the paper's KM application on TPU.
+
+The paper's K-Means loop (§5.1) is near-uniform FLOP-wise but has a
+heavy-tailed per-point *cost* (membership flips, cache misses) that is
+reshuffled every round. Schedule construction (DESIGN.md §2) consumes that
+predicted cost array: each point's cost is quantized to work units, the band
+picks the per-slot unit capacity W, and points costlier than W occupy
+several slots — possibly in different tiles — so per-tile predicted cost
+stays uniform at R*W units, exactly like a split CSR row. A multiply-
+scheduled point is recomputed once per slot; the assignment write is
+idempotent (same argmin), so correctness is unaffected — redundant compute
+is the price a static grid pays where the runtime would have stolen.
+
+Kernel: persistent grid (T,); each step gathers its R scheduled points from
+the (n, D) point table in VMEM, computes squared distances to the (K, D)
+centroids, and scatter-writes per-point argmin through the prefetched
+item-id schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kmeans_kernel(rowid_ref, pts_ref, cent_ref, out_ref, *, n_points: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pts = pts_ref[...]    # (n, D)
+    cent = cent_ref[...]  # (K, D)
+    ids = rowid_ref[t]    # (R,) SMEM scalars: point per slot, -1 pad
+    sel = pts[jnp.clip(ids, 0, n_points - 1)]  # (R, D)
+    d2 = jnp.sum((sel[:, None, :] - cent[None, :, :]) ** 2, axis=-1)  # (R, K)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)  # (R,)
+    for j in range(ids.shape[0]):
+        r = jnp.clip(ids[j], 0, n_points - 1)
+        out_ref[r] = jnp.where(ids[j] >= 0, assign[j], out_ref[r])
+
+
+def ich_kmeans_assign(points, centroids, rowid, *, interpret: bool = False):
+    """points (n, D); centroids (K, D); rowid (T, R) schedule.
+    Returns assignments (n,) int32."""
+    n = points.shape[0]
+    T, R = rowid.shape
+    kernel = functools.partial(_kmeans_kernel, n_points=n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # rowid prefetched to SMEM (the schedule)
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec(points.shape, lambda t, rowid: (0, 0)),
+            pl.BlockSpec(centroids.shape, lambda t, rowid: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda t, rowid: (0,)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(rowid, points, centroids)

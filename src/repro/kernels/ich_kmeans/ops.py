@@ -1,0 +1,41 @@
+"""Public wrapper: iCh schedule construction over a predicted per-point cost
+array (workloads.kmeans_rounds), then the assignment kernel many times."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiling import build_schedule
+
+from .ich_kmeans import ich_kmeans_assign
+
+
+def quantize_costs(costs: np.ndarray) -> np.ndarray:
+    """Predicted float costs -> integer work units (>= 1 per point)."""
+    return np.maximum(np.ceil(np.asarray(costs, np.float64)), 1.0).astype(
+        np.int64)
+
+
+class IChKMeans:
+    """Schedule once per round's cost prediction, assign many times."""
+
+    def __init__(self, costs, *, rows_per_tile: int = 8, eps: float = 0.33,
+                 width: int = None):
+        self.sizes = quantize_costs(costs)
+        self.n = len(self.sizes)
+        self.schedule = build_schedule(self.sizes,
+                                       rows_per_tile=rows_per_tile,
+                                       width=width, eps=eps)
+        self.rowid = jnp.asarray(self.schedule.item_id)
+        self._jitted = {}  # interpret mode -> jitted assign (compile once)
+
+    def __call__(self, points, centroids, interpret: bool | None = None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_kmeans_assign, interpret=interpret))
+        return self._jitted[interpret](jnp.asarray(points, jnp.float32),
+                                       jnp.asarray(centroids, jnp.float32),
+                                       self.rowid)

@@ -1,0 +1,20 @@
+"""Pure-numpy oracles for the iCh-scheduled K-Means assignment kernel."""
+import numpy as np
+
+
+def kmeans_assign_ref(points, centroids) -> np.ndarray:
+    """argmin_k ||x_i - c_k||^2, same fp32 formula as the kernel."""
+    pts = np.asarray(points, np.float32)
+    cent = np.asarray(centroids, np.float32)
+    d2 = ((pts[:, None, :] - cent[None, :, :]) ** 2).sum(-1)
+    return np.argmin(d2, axis=1).astype(np.int32)
+
+
+def kmeans_update_ref(points, assign, k: int) -> np.ndarray:
+    """Centroid update for a full reference round (empty clusters keep a
+    zero centroid, matching the degenerate-input convention in tests)."""
+    pts = np.asarray(points, np.float32)
+    out = np.zeros((k, pts.shape[1]), np.float32)
+    counts = np.bincount(assign, minlength=k).astype(np.float32)
+    np.add.at(out, assign, pts)
+    return out / np.maximum(counts, 1.0)[:, None]

@@ -25,56 +25,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.tiling import build_schedule, ich_tile_width, pack_csr
 
-
-def ich_tile_width(row_nnz: np.ndarray, eps: float = 0.33,
-                   min_w: int = 8, max_w: int = 512) -> int:
-    """Pick the tile width with the paper's band (eqs. 1-3, 8).
-
-    W = the band's UPPER edge mu*(1+eps), rounded up to a power of two:
-    every "normal"-classified row (within mu +- eps*mu) fits in one segment;
-    only "high" rows split across tiles — the work-stealing analogue (their
-    overflow migrates to later tiles). A multiplicative walk (adapt_d per
-    chunk) has no equilibrium on a static distribution — measured in
-    benchmarks/bench_ich_spmv.py — so schedule construction uses the band
-    directly; the runtime walk remains correct where k_i is cumulative
-    (simulator/executor/serving).
-    """
-    mu = float(np.mean(row_nnz))
-    upper = mu * (1.0 + eps)
-    w = 2 ** int(np.ceil(np.log2(max(upper, 1.0))))
-    return int(min(max(w, min_w), max_w))
+__all__ = ["ich_tile_width", "pack_tiles", "ich_spmv"]
 
 
 def pack_tiles(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
                *, rows_per_tile: int = 8, width: int = None, eps: float = 0.33):
     """CSR -> (values (T,R,W), cols (T,R,W), rowid (T,R)) with row splitting.
 
-    Rows are cut into width-W segments; segments are packed greedily into
-    tiles of R row-slots each (a segment of a heavy row may land in any
-    tile => tile work is uniform at R*W slots).
+    Thin wrapper over the shared schedule-construction layer
+    (`core.tiling`): rows are cut into width-W segments; segments are packed
+    greedily into tiles of R row-slots each (a segment of a heavy row may
+    land in any tile => tile work is uniform at R*W slots).
     """
-    n = len(indptr) - 1
     row_nnz = np.diff(indptr)
-    W = width or ich_tile_width(row_nnz, eps)
-    R = rows_per_tile
-    segs = []  # (row, start_in_row, length)
-    for r in range(n):
-        nnz = int(row_nnz[r])
-        for s in range(0, max(nnz, 1), W):
-            segs.append((r, s, min(W, nnz - s) if nnz else 0))
-    T = -(-len(segs) // R)
-    vals = np.zeros((T, R, W), data.dtype)
-    cols = np.zeros((T, R, W), np.int32)
-    rowid = np.full((T, R), -1, np.int32)
-    for i, (r, s, ln) in enumerate(segs):
-        t, j = divmod(i, R)
-        rowid[t, j] = r
-        if ln > 0:
-            base = indptr[r] + s
-            vals[t, j, :ln] = data[base:base + ln]
-            cols[t, j, :ln] = indices[base:base + ln]
-    return vals, cols, rowid, W
+    sched = build_schedule(row_nnz, rows_per_tile=rows_per_tile,
+                           width=width, eps=eps)
+    vals, cols = pack_csr(indptr, indices, data, sched)
+    return vals, cols, sched.item_id, sched.width
 
 
 def _spmv_kernel(rowid_ref, vals_ref, cols_ref, x_ref, out_ref, *, n_rows: int):

@@ -20,11 +20,12 @@ class IChSpmv:
         self.vals = jax.numpy.asarray(vals)
         self.cols = jax.numpy.asarray(cols)
         self.rowid = jax.numpy.asarray(rowid)
+        self._jitted = {}  # interpret mode -> jitted spmv (compile once)
 
     def __call__(self, x, interpret: bool | None = None):
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        fn = functools.partial(ich_spmv, n_rows=self.n_rows,
-                               interpret=interpret)
-        return jax.jit(fn, static_argnames=())(
-            self.vals, self.cols, self.rowid, x)
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_spmv, n_rows=self.n_rows, interpret=interpret))
+        return self._jitted[interpret](self.vals, self.cols, self.rowid, x)

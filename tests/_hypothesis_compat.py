@@ -1,0 +1,29 @@
+"""Import hypothesis if available; otherwise degrade property-based tests to
+skips instead of erroring the whole module at collection.
+
+`requirements.txt` / `pyproject.toml[test]` declare hypothesis, so dev
+installs and CI get the real thing; hermetic containers without it still run
+every plain pytest test in the suite.
+"""
+try:  # pragma: no cover - exercised one way or the other per environment
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in for `hypothesis.strategies`: strategy objects are only
+        inspected by @given, and our @given stub skips the test first."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")

@@ -7,7 +7,11 @@ import pytest
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_attention.ops import flash_attention_op
-from repro.kernels.ich_spmv.ich_spmv import ich_spmv, ich_tile_width, pack_tiles
+from repro.kernels.ich_bfs.ops import IChBfs
+from repro.kernels.ich_bfs.ref import bfs_levels_ref, bfs_step_ref
+from repro.kernels.ich_kmeans.ops import IChKMeans
+from repro.kernels.ich_kmeans.ref import kmeans_assign_ref
+from repro.kernels.ich_spmv.ich_spmv import ich_spmv, pack_tiles
 from repro.kernels.ich_spmv.ref import spmv_ref, tiles_ref
 from repro.kernels.ich_spmv.ops import IChSpmv
 from repro.kernels.mamba_scan.mamba_scan import mamba_scan
@@ -86,18 +90,6 @@ def test_ich_spmv_sweep(n, zipf_a, R):
     np.testing.assert_allclose(y, y_ref, atol=1e-4, rtol=1e-4)
 
 
-def test_ich_tile_width_band_logic():
-    # W = pow2(mu*(1+eps)): uniform-32 rows fit one segment (64 >= 42.6);
-    # small-row inputs clamp to min_w; always a power of two in [8, 512]
-    assert ich_tile_width(np.full(1000, 32)) == 64
-    assert ich_tile_width(np.full(1000, 2)) == 8
-    w_hvy = ich_tile_width(np.minimum(np.random.default_rng(0).zipf(1.5, 1000), 5000))
-    assert w_hvy in {8, 16, 32, 64, 128, 256, 512}
-    # monotone in eps (wider band -> wider tiles)
-    rows = np.random.default_rng(1).integers(1, 100, 500)
-    assert ich_tile_width(rows, eps=0.5) >= ich_tile_width(rows, eps=0.25)
-
-
 def test_ich_spmv_ops_wrapper():
     indptr, indices, data = _random_csr(128, 1.8, seed=7)
     op = IChSpmv(indptr, indices, data)
@@ -116,6 +108,81 @@ def test_ich_spmv_empty_rows():
     y = ich_spmv(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(rowid),
                  x, 4, interpret=True)
     np.testing.assert_allclose(y, spmv_ref(indptr, indices, data, x), atol=1e-6)
+
+
+# ------------------------------------------------------------------- ich_bfs
+def _random_graph(n, kind, seed):
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        deg = rng.integers(1, 21, n)
+    else:  # scale-free, P(k) ~ k^-2.3 as in workloads.bfs_levels
+        deg = np.minimum(rng.zipf(2.3, n), n // 4)
+    indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+    indices = rng.integers(0, n, int(indptr[-1])).astype(np.int32)
+    return indptr, indices
+
+
+@pytest.mark.parametrize("n,kind,R", [(100, "uniform", 4),
+                                      (256, "scale_free", 8),
+                                      (200, "uniform", 8),
+                                      (150, "scale_free", 16)])
+def test_ich_bfs_levels_sweep(n, kind, R):
+    indptr, indices = _random_graph(n, kind, seed=n)
+    g = IChBfs(indptr, indices, rows_per_tile=R)
+    np.testing.assert_array_equal(g.levels(0, interpret=True),
+                                  bfs_levels_ref(indptr, indices, 0))
+
+
+def test_ich_bfs_single_step_matches_ref():
+    indptr, indices = _random_graph(128, "uniform", seed=3)
+    g = IChBfs(indptr, indices)
+    rng = np.random.default_rng(4)
+    frontier = (rng.random(128) < 0.1).astype(np.float32)
+    visited = np.maximum(frontier, (rng.random(128) < 0.3)).astype(np.float32)
+    out = g.step(frontier, visited, interpret=True)
+    np.testing.assert_allclose(out, bfs_step_ref(indptr, indices, frontier,
+                                                 visited), atol=1e-5)
+
+
+def test_ich_bfs_isolated_source():
+    # source with no in-neighbors anywhere pointing out: frontier dies after
+    # expansion; unreached vertices stay at -1
+    indptr = np.array([0, 0, 1, 2], np.int64)   # v0 no in-nbrs; v1<-0; v2<-1
+    indices = np.array([0, 1], np.int32)
+    g = IChBfs(indptr, indices, rows_per_tile=4)
+    np.testing.assert_array_equal(g.levels(0, interpret=True),
+                                  np.array([0, 1, 2], np.int32))
+    np.testing.assert_array_equal(g.levels(2, interpret=True),
+                                  np.array([-1, -1, 0], np.int32))
+
+
+# ---------------------------------------------------------------- ich_kmeans
+@pytest.mark.parametrize("n,D,K,R", [(100, 4, 3, 4), (256, 8, 16, 8),
+                                     (333, 2, 5, 8), (64, 16, 2, 16)])
+def test_ich_kmeans_assign_sweep(n, D, K, R):
+    rng = np.random.default_rng(n)
+    pts = rng.standard_normal((n, D)).astype(np.float32)
+    cent = rng.standard_normal((K, D)).astype(np.float32)
+    costs = rng.uniform(6.0, 10.0, n)
+    costs[rng.choice(n, max(n // 50, 1), replace=False)] += \
+        rng.exponential(120.0, max(n // 50, 1))
+    km = IChKMeans(costs, rows_per_tile=R)
+    out = np.asarray(km(pts, cent, interpret=True))
+    np.testing.assert_allclose(out, kmeans_assign_ref(pts, cent), atol=1e-5)
+
+
+def test_ich_kmeans_heavy_point_split_is_idempotent():
+    # a point far heavier than max_w occupies many slots; its assignment is
+    # recomputed per slot and must still be written exactly once per value
+    costs = np.full(32, 7.0)
+    costs[5] = 10_000.0
+    km = IChKMeans(costs, width=8)
+    assert (km.schedule.item_id == 5).sum() > 1  # genuinely split
+    rng = np.random.default_rng(9)
+    pts = rng.standard_normal((32, 3)).astype(np.float32)
+    cent = rng.standard_normal((4, 3)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(km(pts, cent, interpret=True)),
+                                  kmeans_assign_ref(pts, cent))
 
 
 # ---------------------------------------------------------------- mamba_scan

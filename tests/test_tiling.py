@@ -1,0 +1,135 @@
+"""Tests for the shared iCh schedule-construction layer (core/tiling.py)."""
+import numpy as np
+import pytest
+
+from repro.core import policies as P
+from repro.core.simulator import simulate
+from repro.core.tiling import (
+    build_schedule, coverage_counts, ich_tile_width, pack_csr, split_items,
+)
+
+
+def _random_sizes(n, zipf_a, seed, max_size=300):
+    rng = np.random.default_rng(seed)
+    sizes = np.minimum(rng.zipf(zipf_a, n), max_size).astype(np.int64)
+    sizes[rng.random(n) < 0.1] = 0  # sprinkle empty items
+    return sizes
+
+
+# ------------------------------------------------------------------ coverage
+@pytest.mark.parametrize("n,zipf_a,R,seed", [
+    (100, 1.6, 4, 0), (256, 1.9, 8, 1), (333, 2.5, 8, 2), (64, 1.3, 16, 3),
+])
+def test_every_iteration_covered_exactly_once(n, zipf_a, R, seed):
+    sizes = _random_sizes(n, zipf_a, seed)
+    sched = build_schedule(sizes, rows_per_tile=R)
+    counts = coverage_counts(sched, sizes)
+    assert counts.shape == (int(sizes.sum()),)
+    assert (counts == 1).all()
+    # every item owns at least one slot (even empty ones)
+    present = np.unique(sched.item_id[sched.item_id >= 0])
+    np.testing.assert_array_equal(present, np.arange(n))
+    assert int(sched.tile_work().sum()) == int(sizes.sum())
+
+
+def test_empty_sizes_array_raises():
+    with pytest.raises(ValueError, match="empty sizes"):
+        build_schedule(np.array([], dtype=np.int64))
+
+
+def test_empty_rows_get_one_slot_each():
+    sizes = np.zeros(10, np.int64)
+    sched = build_schedule(sizes, rows_per_tile=4)
+    assert sched.n_tiles == 3  # ceil(10 / 4)
+    assert (sched.seg_len == 0).all()
+    assert (sched.tile_work() == 0).all()
+    assert sorted(sched.item_id[sched.item_id >= 0]) == list(range(10))
+
+
+def test_single_row_wider_than_max_w_splits():
+    sizes = np.array([10_000], np.int64)
+    sched = build_schedule(sizes, rows_per_tile=8)
+    assert sched.width == 512  # clamped at max_w
+    n_segs = -(-10_000 // 512)
+    assert (sched.item_id >= 0).sum() == n_segs
+    assert (coverage_counts(sched, sizes) == 1).all()
+    # all segments belong to item 0 and tile back-to-back
+    starts = np.sort(sched.seg_start[sched.item_id >= 0])
+    np.testing.assert_array_equal(starts, np.arange(n_segs) * 512)
+
+
+def test_explicit_width_override():
+    sizes = _random_sizes(200, 1.8, 5)
+    sched = build_schedule(sizes, width=16)
+    assert sched.width == 16
+    assert (sched.seg_len <= 16).all()
+    assert (coverage_counts(sched, sizes) == 1).all()
+
+
+def test_width_band_monotone_and_clamped():
+    # W = pow2(mu*(1+eps)): uniform-32 rows fit one segment (64 >= 42.6);
+    # small-row inputs clamp to min_w; always a power of two in [8, 512]
+    assert ich_tile_width(np.full(1000, 32)) == 64
+    assert ich_tile_width(np.full(1000, 2)) == 8
+    w_hvy = ich_tile_width(
+        np.minimum(np.random.default_rng(0).zipf(1.5, 1000), 5000))
+    assert w_hvy in {8, 16, 32, 64, 128, 256, 512}
+    # monotone in eps (wider band -> wider tiles)
+    rows = np.random.default_rng(1).integers(1, 100, 500)
+    assert ich_tile_width(rows, eps=0.5) >= ich_tile_width(rows, eps=0.25)
+
+
+def test_split_items_orders_segments_by_item():
+    segs = split_items(np.array([5, 0, 12]), width=8)
+    assert segs == [(0, 0, 5), (1, 0, 0), (2, 0, 8), (2, 8, 4)]
+
+
+# -------------------------------------------------------------- CSR packing
+def test_pack_csr_matches_flat_payload():
+    rng = np.random.default_rng(7)
+    sizes = _random_sizes(120, 1.7, 7)
+    indptr = np.concatenate([[0], np.cumsum(sizes)])
+    nnz = int(indptr[-1])
+    indices = rng.integers(0, 120, nnz).astype(np.int32)
+    data = rng.standard_normal(nnz).astype(np.float32)
+    sched = build_schedule(sizes, rows_per_tile=8)
+    vals, cols = pack_csr(indptr, indices, data, sched)
+    # scatter the tiles back into flat CSR order and compare
+    flat_v = np.zeros(nnz, np.float32)
+    flat_c = np.zeros(nnz, np.int32)
+    for t in range(sched.n_tiles):
+        for j in range(sched.rows_per_tile):
+            it, s, ln = (int(sched.item_id[t, j]), int(sched.seg_start[t, j]),
+                         int(sched.seg_len[t, j]))
+            if it >= 0 and ln > 0:
+                b = int(indptr[it]) + s
+                flat_v[b:b + ln] = vals[t, j, :ln]
+                flat_c[b:b + ln] = cols[t, j, :ln]
+    np.testing.assert_array_equal(flat_v, data)
+    np.testing.assert_array_equal(flat_c, indices)
+    # padding slots are zero (kernels reduce over W unmasked)
+    mask = np.zeros_like(vals, bool)
+    for t in range(sched.n_tiles):
+        for j in range(sched.rows_per_tile):
+            mask[t, j, :int(sched.seg_len[t, j])] = True
+    assert (vals[~mask] == 0).all() and (cols[~mask] == 0).all()
+
+
+# ------------------------------------------------- simulator cross-check
+def test_schedule_replays_in_simulator_chunk_for_chunk():
+    """The constructed schedule, handed to the discrete-event simulator as an
+    explicit pretiled policy over the same cost array, must be dispatched
+    with exactly the per-tile work the schedule predicts."""
+    sizes = _random_sizes(300, 1.8, 11)
+    costs = 1.0 + sizes.astype(np.float64)  # per-item cost model
+    sched = build_schedule(sizes, rows_per_tile=8)
+    ranges = sched.slot_ranges()
+    # tiles cover the flattened work-unit space contiguously, in order
+    assert ranges[0, 0] == 0 and ranges[-1, 1] == int(sizes.sum())
+    np.testing.assert_array_equal(ranges[1:, 0], ranges[:-1, 1])
+    res = simulate(sched.unit_costs(costs, sizes), 4, P.pretiled(ranges),
+                   record_chunks=True)
+    sim_work = np.array([w for (_, _, _, w) in res.chunk_log])
+    np.testing.assert_allclose(sim_work, sched.tile_cost(costs, sizes),
+                               atol=1e-9)
+    assert res.chunks == sched.n_tiles
