@@ -1,0 +1,198 @@
+"""Schedule-construction performance benchmark (the repo's perf trajectory).
+
+Measures, across item counts (default 10k / 100k / 1M):
+
+  * `build_schedule` wall time — vectorized array program vs the
+    `_reference_*` loop oracle (the seed implementation) — plus the same
+    comparison for `pack_csr`; outputs are asserted identical, so the
+    speedup numbers can't drift away from correctness;
+  * interpret-mode step cost of the three ich_* Pallas kernels at the
+    smallest size (interpret mode is Python-per-grid-step, so larger sizes
+    measure the interpreter, not the kernel).
+
+Writes `BENCH_schedule.json` at the repo root so future PRs have a recorded
+trajectory to regress against, and prints one CSV line per measurement.
+Run standalone:
+
+  PYTHONPATH=src python -m benchmarks.bench_schedule_build
+  PYTHONPATH=src python -m benchmarks.bench_schedule_build --sizes 10000
+
+or through the driver: PYTHONPATH=src python -m benchmarks.run --bench schedule
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import tiling as T
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_SIZES = (10_000, 100_000, 1_000_000)
+ROWS_PER_TILE = 8
+
+
+def workload(n: int, seed: int = 1) -> np.ndarray:
+    """Heavy-tailed per-item work: zipf(1.8) capped at 2000, 10% zero items
+    (the empty-CSR-row / isolated-vertex case)."""
+    rng = np.random.default_rng(seed)
+    sizes = np.minimum(rng.zipf(1.8, n), 2000).astype(np.int64)
+    sizes[rng.random(n) < 0.1] = 0
+    return sizes
+
+
+def _best(fn, repeats: int):
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _csr(sizes: np.ndarray, seed: int = 2):
+    rng = np.random.default_rng(seed)
+    indptr = np.concatenate([[0], np.cumsum(sizes)])
+    nnz = int(indptr[-1])
+    indices = rng.integers(0, sizes.size, nnz).astype(np.int32)
+    data = rng.standard_normal(nnz).astype(np.float32)
+    return indptr, indices, data
+
+
+def bench_build(n: int, repeats: int) -> dict:
+    """Vectorized vs reference construction at n items (outputs asserted
+    equal before any timing is reported)."""
+    sizes = workload(n)
+    ref_repeats = repeats if n <= 100_000 else 1  # ref at 1M is seconds/run
+    t_vec, sched = _best(lambda: T.build_schedule(
+        sizes, rows_per_tile=ROWS_PER_TILE), repeats)
+    t_ref, ref = _best(lambda: T._reference_build_schedule(
+        sizes, rows_per_tile=ROWS_PER_TILE), ref_repeats)
+    np.testing.assert_array_equal(sched.item_id, ref.item_id)
+    np.testing.assert_array_equal(sched.seg_start, ref.seg_start)
+    np.testing.assert_array_equal(sched.seg_len, ref.seg_len)
+
+    indptr, indices, data = _csr(sizes)
+    t_pvec, packed = _best(
+        lambda: T.pack_csr(indptr, indices, data, sched), repeats)
+    t_pref, packed_ref = _best(
+        lambda: T._reference_pack_csr(indptr, indices, data, sched), 1)
+    np.testing.assert_array_equal(packed[0], packed_ref[0])
+    np.testing.assert_array_equal(packed[1], packed_ref[1])
+    return {
+        "n_items": n,
+        "nnz": int(sizes.sum()),
+        "width": sched.width,
+        "n_tiles": sched.n_tiles,
+        "build_vec_s": t_vec,
+        "build_ref_s": t_ref,
+        "build_speedup": t_ref / t_vec,
+        "pack_vec_s": t_pvec,
+        "pack_ref_s": t_pref,
+        "pack_speedup": t_pref / t_pvec,
+    }
+
+
+def bench_kernel_step(n: int) -> dict:
+    """Steady-state interpret-mode cost of one full schedule sweep for each
+    ich_* kernel (first call = trace/compile, second call timed)."""
+    import jax
+
+    from repro.kernels.ich_bfs.ops import IChBfs
+    from repro.kernels.ich_kmeans.ops import IChKMeans
+    from repro.kernels.ich_spmv.ops import IChSpmv
+
+    rng = np.random.default_rng(3)
+    sizes = workload(n)
+    indptr, indices, data = _csr(sizes)
+    out = {"n_items": n}
+
+    spmv = IChSpmv(indptr, indices, data, rows_per_tile=ROWS_PER_TILE)
+    x = rng.standard_normal(sizes.size).astype(np.float32)
+    jax.block_until_ready(spmv(x, interpret=True))  # trace + compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(spmv(x, interpret=True))
+    dt = time.perf_counter() - t0
+    n_tiles = spmv.rowid.shape[0]
+    out["ich_spmv"] = {"total_s": dt, "n_tiles": int(n_tiles),
+                       "per_tile_us": 1e6 * dt / n_tiles}
+
+    bfs = IChBfs(indptr, indices, rows_per_tile=ROWS_PER_TILE)
+    frontier = (rng.random(sizes.size) < 0.05).astype(np.float32)
+    visited = frontier.copy()
+    jax.block_until_ready(bfs.step(frontier, visited, interpret=True))
+    t0 = time.perf_counter()
+    jax.block_until_ready(bfs.step(frontier, visited, interpret=True))
+    dt = time.perf_counter() - t0
+    out["ich_bfs"] = {"total_s": dt, "n_tiles": bfs.schedule.n_tiles,
+                      "per_tile_us": 1e6 * dt / bfs.schedule.n_tiles}
+
+    km = IChKMeans(np.maximum(sizes.astype(np.float64), 1.0),
+                   rows_per_tile=ROWS_PER_TILE)
+    pts = rng.standard_normal((sizes.size, 8)).astype(np.float32)
+    cent = rng.standard_normal((16, 8)).astype(np.float32)
+    jax.block_until_ready(km(pts, cent, interpret=True))
+    t0 = time.perf_counter()
+    jax.block_until_ready(km(pts, cent, interpret=True))
+    dt = time.perf_counter() - t0
+    out["ich_kmeans"] = {"total_s": dt, "n_tiles": km.schedule.n_tiles,
+                         "per_tile_us": 1e6 * dt / km.schedule.n_tiles}
+    return out
+
+
+def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
+         kernel_step: bool = True) -> dict:
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    sizes = sorted(int(s) for s in sizes)
+    report = {
+        "benchmark": "schedule_build",
+        "workload": "zipf(a=1.8) capped at 2000, 10% zero items, seed 1",
+        "rows_per_tile": ROWS_PER_TILE,
+        "repeats": repeats,
+        "env": {"python": platform.python_version(),
+                "numpy": np.__version__,
+                "machine": platform.machine()},
+        "builds": [],
+    }
+    print("n_items,width,n_tiles,build_vec_s,build_ref_s,build_speedup,"
+          "pack_vec_s,pack_ref_s,pack_speedup")
+    for n in sizes:
+        row = bench_build(n, repeats)
+        report["builds"].append(row)
+        print(f"{row['n_items']},{row['width']},{row['n_tiles']},"
+              f"{row['build_vec_s']:.5f},{row['build_ref_s']:.5f},"
+              f"{row['build_speedup']:.1f},{row['pack_vec_s']:.5f},"
+              f"{row['pack_ref_s']:.5f},{row['pack_speedup']:.1f}")
+    if kernel_step:
+        ks = bench_kernel_step(sizes[0])
+        report["kernel_step_interpret"] = ks
+        for k in ("ich_spmv", "ich_bfs", "ich_kmeans"):
+            print(f"kernel_step,{k},n={ks['n_items']},"
+                  f"total_s={ks[k]['total_s']:.3f},"
+                  f"per_tile_us={ks[k]['per_tile_us']:.1f}")
+    out_path = Path(out_path) if out_path else ROOT / "BENCH_schedule.json"
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sizes", default=",".join(map(str, DEFAULT_SIZES)),
+                    help="comma-separated item counts")
+    ap.add_argument("--repeats", type=int, default=7,
+                    help="best-of repeats for the vectorized path")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_schedule.json)")
+    ap.add_argument("--no-kernel-step", action="store_true",
+                    help="skip the interpret-mode kernel step measurement")
+    args = ap.parse_args()
+    main(sizes=[int(s) for s in args.sizes.split(",")],
+         repeats=args.repeats, out_path=args.out,
+         kernel_step=not args.no_kernel_step)

@@ -7,6 +7,11 @@ results/paper/, and validates the paper's headline claims:
   * iCh beats plain stealing on BFS and K-Means (paper: +9.6%..54%).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+       PYTHONPATH=src python -m benchmarks.run --bench schedule [--fast]
+
+`--bench paper` (default) reproduces the paper figures; `--bench schedule`
+runs the schedule-construction perf benchmark (bench_schedule_build) and
+refreshes BENCH_schedule.json at the repo root.
 """
 from __future__ import annotations
 
@@ -25,7 +30,15 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (quick smoke; claims still checked)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--bench", default="paper",
+                    choices=["paper", "schedule"],
+                    help="paper = figure reproduction; schedule = "
+                         "schedule-construction perf (BENCH_schedule.json)")
     args = ap.parse_args()
+    if args.bench == "schedule":
+        from . import bench_schedule_build as BS
+        BS.main(sizes=(10_000,) if args.fast else BS.DEFAULT_SIZES)
+        return
     n = 20_000 if args.fast else 50_000
     n_spmv = 40_000 if args.fast else 100_000
 

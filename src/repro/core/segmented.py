@@ -1,0 +1,109 @@
+"""Shared segmented-reduction epilogue for the iCh Pallas kernels.
+
+Every `ich_*` kernel ends the same way: a tile computed one value per
+segment slot and must fold those R values into the output array at the rows
+named by the prefetched `item_id` schedule, where several slots may name the
+same row (a split item contributes multiple segments, possibly within one
+tile). The original kernels did this with an unrolled per-slot scalar
+read-modify-write — R sequential scalar ops per grid step that neither the
+MXU nor the VPU can help with.
+
+This module replaces that epilogue with one windowed vector op, exploiting a
+structural guarantee of `core.tiling.build_schedule`: greedy packing keeps
+segments in item order and every item owns at least one segment, so the
+items appearing in any tile of R slots form a CONTIGUOUS id range spanning
+at most R rows (consecutive slots step the item id by 0 or +1). A tile's
+whole scatter therefore lands inside one length-R window of the output:
+
+1. `slot_window` finds the window base and builds the (R, R) masked one-hot
+   matrix P with P[j, i] = 1 iff slot j's row is base + i (padding slots,
+   id -1, give all-zero rows);
+2. the slot values are combined per output row — `segment_sum` is a one-hot
+   matmul (values @ P, an MXU op), `segment_max` a masked VPU reduction;
+3. `segmented_apply` folds the combined window into `out_ref[base:base+R]`
+   with a single dynamic-slice read-modify-write (grid steps run
+   sequentially on a TPU core, so the RMW is race-free), under one of three
+   combine modes: "add" (SpMV partial sums), "max" (BFS frontier OR),
+   "store" (K-Means idempotent assignment; uncovered window rows keep their
+   previous value).
+
+The window invariant only needs segments emitted in item order with >= 1
+segment per item — exactly what `build_schedule` guarantees for any sizes,
+width, or rows_per_tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COMBINES = ("add", "max", "store")
+
+
+def slot_window(rows: jax.Array, n_out: int) -> tuple[jax.Array, jax.Array]:
+    """Window base + masked one-hot for a tile's R slot rows.
+
+    `rows` is the (R,) int32 slot->row schedule for one tile (-1 = padding).
+    Returns `(base, onehot)` where `base` is a scalar window origin clamped
+    to [0, n_out - Wn] and `onehot` is (R, Wn) bool with
+    `onehot[j, i] = (rows[j] == base + i)`; Wn = min(R, n_out). Padding
+    slots produce all-zero one-hot rows, and an all-padding tile produces an
+    all-zero matrix (the apply becomes a no-op).
+    """
+    R = rows.shape[0]
+    wn = min(R, int(n_out))
+    valid = rows >= 0
+    r0 = jnp.min(jnp.where(valid, rows, n_out - 1))
+    base = jnp.clip(r0, 0, n_out - wn)
+    offs = jnp.where(valid, rows - base, -1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (R, wn), 1)
+    return base, offs[:, None] == lane
+
+
+def segment_sum(values: jax.Array, onehot: jax.Array) -> jax.Array:
+    """Per-window-row sums of slot values: a (1,R)x(R,Wn) one-hot matmul.
+
+    Accumulates in float32 or wider — float64 inputs keep float64 accuracy
+    (matching the scalar-loop epilogue this layer replaced) while float32
+    stays a plain MXU matmul."""
+    acc = jnp.promote_types(values.dtype, jnp.float32)
+    return jnp.dot(values[None, :].astype(acc), onehot.astype(acc),
+                   preferred_element_type=acc)[0]
+
+
+def segment_max(values: jax.Array, onehot: jax.Array,
+                neutral) -> jax.Array:
+    """Per-window-row max of slot values (masked VPU reduction)."""
+    return jnp.max(jnp.where(onehot, values[:, None], neutral), axis=0)
+
+
+def segmented_apply(out_ref, rows: jax.Array, values: jax.Array, *,
+                    combine: str) -> None:
+    """Fold a tile's (R,) slot values into `out_ref` through its schedule.
+
+    One windowed read-modify-write replaces R scalar ones. Rows inside the
+    window that no slot covers are always left unchanged. `combine`:
+      * "add"   — out[r] += sum of the slots scheduled on row r (SpMV);
+      * "max"   — out[r] = max(out[r], max of r's slots) (BFS);
+      * "store" — out[r] = r's slot value where r is scheduled this tile
+                  (K-Means; duplicate slots of a split item carry identical
+                  values, so any-wins is exact).
+    """
+    if combine not in COMBINES:
+        raise ValueError(f"combine must be one of {COMBINES}, got {combine!r}")
+    n_out = out_ref.shape[0]
+    base, onehot = slot_window(rows, n_out)
+    wn = onehot.shape[1]
+    cur = out_ref[pl.ds(base, wn)]
+    if combine == "add":
+        upd = cur + segment_sum(values, onehot).astype(cur.dtype)
+    else:
+        neutral = (-jnp.inf if jnp.issubdtype(values.dtype, jnp.floating)
+                   else jnp.iinfo(values.dtype).min)
+        covered = jnp.any(onehot, axis=0)
+        val = segment_max(values, onehot, neutral).astype(cur.dtype)
+        if combine == "max":
+            upd = jnp.where(covered, jnp.maximum(cur, val), cur)
+        else:  # store
+            upd = jnp.where(covered, val, cur)
+    out_ref[pl.ds(base, wn)] = upd

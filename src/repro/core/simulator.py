@@ -66,12 +66,24 @@ class SimResult:
         return self.busy / (self.makespan * self.p) if self.makespan > 0 else 0.0
 
 
+_SPEEDS_CACHE: dict[tuple[int, float, int], np.ndarray] = {}
+
+
 def _speeds(p: int, params: SimParams) -> np.ndarray:
     # One stable speed stream per seed: worker w has the same speed at every
     # thread count, so speedups are measured against a consistent baseline.
-    rng = np.random.default_rng(params.seed)
-    s = 1.0 + params.speed_jitter * rng.standard_normal(max(p, 64))
-    return np.clip(s[:p], 0.5, None)
+    # Memoized per (p, jitter, seed): policy-grid sweeps call simulate()
+    # hundreds of times with identical params, and re-seeding a default_rng
+    # per call was measurable overhead. Cached arrays are frozen read-only.
+    key = (p, params.speed_jitter, params.seed)
+    s = _SPEEDS_CACHE.get(key)
+    if s is None:
+        rng = np.random.default_rng(params.seed)
+        s = 1.0 + params.speed_jitter * rng.standard_normal(max(p, 64))
+        s = np.clip(s[:p], 0.5, None)
+        s.setflags(write=False)
+        _SPEEDS_CACHE[key] = s
+    return s
 
 
 def simulate(

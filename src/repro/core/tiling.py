@@ -22,12 +22,60 @@ tiles to contiguous chunks in flattened work-unit space, which can be handed
 to `simulate(..., policies.pretiled(ranges), record_chunks=True)` — the
 simulator's per-chunk work must equal `tile_cost` (see
 benchmarks/bench_ich_kernels.py and tests/test_tiling.py).
+
+Construction is fully vectorized (DESIGN.md §2.5): segment counts come from a
+ceil-div, segment/unit coordinates from `cumsum`/`repeat` de-flattening, and
+payload packing from one fancy-gather — no Python-level per-segment or
+per-nonzero loop anywhere on the construction path, so a schedule over
+millions of items builds in milliseconds (benchmarks/bench_schedule_build.py
+tracks the trajectory in BENCH_schedule.json). The original loop
+formulations are kept as `_reference_*` oracles; tests assert equality.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
+
+# ---------------------------------------------------------------------------
+# Construction workspace: schedule construction is a per-request operation in
+# a serving path, so its temporaries (a few MB per million items) are reused
+# across calls instead of being re-allocated (and re-page-faulted) every
+# time. Only scratch lives here — every array handed back to a caller is
+# freshly allocated. Guarded by a lock: construction is thread-safe, calls
+# just serialize over the scratch. The helper pool overlaps the two
+# independent gather passes on a second core (NumPy's take/repeat release
+# the GIL).
+# ---------------------------------------------------------------------------
+_WS: dict[str, np.ndarray] = {}
+_WS_LOCK = threading.Lock()
+_POOL = ThreadPoolExecutor(max_workers=1,
+                           thread_name_prefix="tiling-gather")
+
+
+def _ws(name: str, n: int, dtype) -> np.ndarray:
+    """A reusable scratch vector of at least n elements (prefix view)."""
+    buf = _WS.get(name)
+    if buf is None or buf.size < n or buf.dtype != np.dtype(dtype):
+        grow = 0 if buf is None else buf.size * 2
+        buf = np.empty(max(n, grow, 1024), dtype)
+        _WS[name] = buf
+    return buf[:n]
+
+
+def _ws_iota(n: int, dtype=np.int32) -> np.ndarray:
+    """Persistent [0, 1, 2, ...] prefix (never recomputed), one per dtype —
+    callers indexing past 2**31 units must ask for the int64 variant (an
+    int32 arange would silently wrap)."""
+    key = f"iota_{np.dtype(dtype).name}"
+    buf = _WS.get(key)
+    if buf is None or buf.size < n:
+        grow = 0 if buf is None else buf.size * 2
+        buf = np.arange(max(n, grow, 1024), dtype=dtype)
+        _WS[key] = buf
+    return buf[:n]
 
 
 def ich_tile_width(sizes: np.ndarray, eps: float = 0.33,
@@ -49,13 +97,96 @@ def ich_tile_width(sizes: np.ndarray, eps: float = 0.33,
     return int(min(max(w, min_w), max_w))
 
 
-def split_items(sizes: np.ndarray, width: int) -> list[tuple[int, int, int]]:
-    """Cut items into width-W segments: [(item, start_in_item, length), ...].
+def split_items(
+        sizes: np.ndarray, width: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Cut items into width-W segments: (item, start_in_item, length) arrays.
 
     Segments are emitted in item order; a zero-size item still emits one
     zero-length segment so every item owns at least one slot (kernels rely on
     this to e.g. zero an empty CSR row's output).
+
+    Vectorized: item i emits max(ceil(sizes[i]/W), 1) segments, so the
+    segment->item map is one `repeat` of iota; every other per-segment
+    stream is a `take` through that map (a segment's rank within its item is
+    its global rank minus its item's exclusive-prefix segment count, one
+    `cumsum`), and start/length follow with in-place int32 arithmetic.
+    Per-item sizes and the total segment count must fit int32 (a single item
+    is bounded at 2**31-1 work units). `_reference_split_items` is the loop
+    oracle.
     """
+    if int(width) <= 0:
+        raise ValueError(f"tile width must be positive, got {width}")
+    if np.asarray(sizes).size == 0:
+        empty = np.empty(0, np.int32)
+        return empty, empty.copy(), empty.copy()
+    item, start, length, _ = _split_segments(sizes, width, 1)
+    return item, start, length
+
+
+def _split_segments(
+        sizes: np.ndarray, width: int, round_to: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Segment streams padded to a multiple of `round_to` slots.
+
+    Returns (item, start, length, n_segs): the first n_segs entries are real
+    segments in item order, the (< round_to) tail is padding with item -1
+    and start/length 0 — exactly the slot layout `build_schedule` reshapes
+    to (T, R). The returned arrays are caller-owned; only scratch comes from
+    the shared workspace (see the module comment on `_WS`).
+    """
+    sizes_arr = np.asarray(sizes)
+    if sizes_arr.size and \
+            int(sizes_arr.max()) > np.iinfo(np.int32).max - max(int(width), 1):
+        raise ValueError("per-item sizes must fit int32; largest item is "
+                         f"{int(sizes_arr.max())} work units")
+    s32 = sizes_arr.astype(np.int32, copy=False)
+    w = np.int32(width)
+    n = s32.size
+    with _WS_LOCK:
+        n_segs = _ws("n_segs", n, np.int32)
+        np.add(s32, np.int32(width - 1), out=n_segs)
+        np.floor_divide(n_segs, w, out=n_segs)
+        np.maximum(n_segs, np.int32(1), out=n_segs)
+        total = int(n_segs.sum(dtype=np.int64))
+        if total > np.iinfo(np.int32).max:
+            raise ValueError(f"schedule would need {total} segments, which "
+                             "exceeds the int32 construction bound")
+        cum = _ws("cum", n, np.int32)
+        np.cumsum(n_segs, out=cum)
+        padded = -(-max(total, 1) // round_to) * round_to
+        first = _ws("first", n, np.int32)
+        np.subtract(cum, n_segs, out=first)  # exclusive-prefix seg counts
+        item = np.repeat(_ws_iota(n), n_segs)
+        start = np.empty(padded, np.int32)
+        length = np.empty(padded, np.int32)
+        # the two gathers through `item` are independent: run one on the
+        # helper thread while this thread does the other (below the
+        # threshold the pool handoff costs more than it overlaps)
+        first_rep = _ws("first_rep", total, np.int32)
+        fut = (_POOL.submit(np.take, first, item, out=first_rep, mode="clip")
+               if total >= 65_536 else
+               np.take(first, item, out=first_rep, mode="clip"))
+        np.take(s32, item, out=length[:total], mode="clip")
+        if fut is not first_rep:
+            fut.result()
+        np.subtract(_ws_iota(total), first_rep, out=start[:total])
+        np.multiply(start[:total], w, out=start[:total])
+        # length = clip(size - start, 0, W)
+        np.subtract(length[:total], start[:total], out=length[:total])
+        np.clip(length[:total], 0, w, out=length[:total])
+    item.resize(padded, refcheck=False)  # zero-fills the (< round_to) tail
+    item[total:] = -1
+    start[total:] = 0
+    length[total:] = 0
+    return item, start, length, total
+
+
+def _reference_split_items(sizes: np.ndarray,
+                           width: int) -> list[tuple[int, int, int]]:
+    """Loop oracle for `split_items` (one tuple per segment, same order)."""
+    if int(width) <= 0:
+        raise ValueError(f"tile width must be positive, got {width}")
     segs: list[tuple[int, int, int]] = []
     for i, size in enumerate(np.asarray(sizes)):
         size = int(size)
@@ -128,16 +259,45 @@ class TileSchedule:
         return np.repeat(unit, sizes)
 
 
+def _check_width(width: int | None) -> int | None:
+    if width is not None and int(width) <= 0:
+        raise ValueError(f"explicit tile width must be positive, got {width}")
+    return None if width is None else int(width)
+
+
 def build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
                    width: int | None = None, eps: float = 0.33,
                    min_w: int = 8, max_w: int = 512) -> TileSchedule:
-    """Band -> W -> segments -> greedy packing into (T, R) slots."""
+    """Band -> W -> segments -> greedy packing into (T, R) slots.
+
+    Packing is a reshape: segments are already in pack order, so tile t's
+    slots are segments [t*R, (t+1)*R) and the only real work is padding the
+    segment axis out to T*R. `_reference_build_schedule` is the loop oracle.
+    """
     sizes = np.asarray(sizes)
     if sizes.size == 0:
         raise ValueError("cannot build a schedule from an empty sizes array")
-    W = int(width) if width else ich_tile_width(sizes, eps, min_w, max_w)
+    width = _check_width(width)
+    W = width if width else ich_tile_width(sizes, eps, min_w, max_w)
     R = int(rows_per_tile)
-    segs = split_items(sizes, W)
+    item_id, seg_start, seg_len, _ = _split_segments(sizes, W, R)
+    T = item_id.size // R
+    return TileSchedule(item_id.reshape(T, R), seg_start.reshape(T, R),
+                        seg_len.reshape(T, R), W, len(sizes))
+
+
+def _reference_build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
+                              width: int | None = None, eps: float = 0.33,
+                              min_w: int = 8,
+                              max_w: int = 512) -> TileSchedule:
+    """Loop oracle for `build_schedule` (per-segment placement loop)."""
+    sizes = np.asarray(sizes)
+    if sizes.size == 0:
+        raise ValueError("cannot build a schedule from an empty sizes array")
+    width = _check_width(width)
+    W = width if width else ich_tile_width(sizes, eps, min_w, max_w)
+    R = int(rows_per_tile)
+    segs = _reference_split_items(sizes, W)
     T = -(-len(segs) // R)
     item_id = np.full((T, R), -1, np.int32)
     seg_start = np.zeros((T, R), np.int32)
@@ -150,6 +310,19 @@ def build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
     return TileSchedule(item_id, seg_start, seg_len, W, len(sizes))
 
 
+def _unit_coords(schedule: TileSchedule) -> tuple[np.ndarray, np.ndarray]:
+    """De-flatten the schedule to work-unit granularity: (slot, pos) where
+    `slot` is the flat (t*R + j) slot owning each unit and `pos` the unit's
+    rank within its segment. One `repeat` + one `cumsum`. Used by
+    `coverage_counts`; `pack_csr` re-derives the same coordinates inline in
+    workspace int32 (its hot path fuses them into src/dst index builds)."""
+    seg_len = schedule.seg_len.reshape(-1).astype(np.int64)
+    slot = np.repeat(np.arange(seg_len.size, dtype=np.int64), seg_len)
+    first = np.repeat(np.cumsum(seg_len) - seg_len, seg_len)
+    pos = np.arange(int(seg_len.sum()), dtype=np.int64) - first
+    return slot, pos
+
+
 def pack_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
              schedule: TileSchedule) -> tuple[np.ndarray, np.ndarray]:
     """Gather CSR payloads into the schedule's (T, R, W) layout.
@@ -157,9 +330,68 @@ def pack_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     Returns (vals, cols); padding slots/tails are zero, so sum-reductions
     over W need no masking (and vals doubles as a validity mask when the
     payload is all-ones, as in BFS).
+
+    Vectorized: every scheduled work unit's CSR source index is
+    indptr[item] + seg_start + pos and its destination is slot*W + pos, so
+    the whole packing is one gather + one (sorted-index) scatter per payload
+    array, with the vals and cols chains overlapped on the helper thread.
+    Index arithmetic runs in int32 through the construction workspace when
+    nnz and T*R*W fit (the int64 general case takes the same path, just
+    wider). `_reference_pack_csr` is the loop oracle.
     """
+    indices = np.asarray(indices)
+    data = np.asarray(data)
     T, R, W = schedule.n_tiles, schedule.rows_per_tile, schedule.width
-    vals = np.zeros((T, R, W), data.dtype)
+    n_slots = T * R
+    trw = n_slots * W
+    vals = np.zeros(trw, data.dtype)
+    cols = np.zeros(trw, np.int32)
+    with _WS_LOCK:
+        len_f = schedule.seg_len.reshape(-1)
+        cum = _ws("pk_cum", n_slots, np.int64)
+        np.cumsum(len_f, out=cum)
+        total = int(cum[-1])
+        dt = np.int32 if max(trw, int(indptr[-1])) < 2 ** 31 else np.int64
+        # per-slot CSR base: indptr[item] + seg_start (padding slots have
+        # len 0 and contribute no units, so their wrapped base is never read)
+        base = _ws("pk_base", n_slots, dt)
+        np.take(np.asarray(indptr).astype(dt, copy=False),
+                schedule.item_id.reshape(-1), out=base, mode="wrap")
+        base += schedule.seg_start.reshape(-1)
+        first = _ws("pk_first", n_slots, dt)
+        np.subtract(cum, len_f, out=first, casting="unsafe")
+        # slot/unit iotas in dt: int32 arange would wrap past 2**31 units,
+        # which is exactly when the wide path is selected
+        slot = np.repeat(_ws_iota(n_slots, dt), len_f)
+        # pos = unit rank within its segment; src = CSR source per unit
+        pos = _ws("pk_pos", total, dt)
+        np.take(first, slot, out=pos, mode="clip")
+        np.subtract(_ws_iota(total, dt), pos, out=pos)
+        src = _ws("pk_src", total, dt)
+        np.take(base, slot, out=src, mode="clip")
+        src += pos
+        dst = _ws("pk_dst", total, dt)
+        np.multiply(slot, dt(W), out=dst)  # dst = slot*W + pos, all in dt
+        dst += pos
+        # vals chain on the helper thread, cols chain here
+        def _scatter(dst_flat, payload, srcidx, out):
+            out[dst_flat] = np.take(payload, srcidx)
+
+        fut = (_POOL.submit(_scatter, dst, data, src, vals)
+               if total >= 65_536 else _scatter(dst, data, src, vals))
+        cols[dst] = np.take(indices, src)
+        if fut is not None:
+            fut.result()
+    return vals.reshape(T, R, W), cols.reshape(T, R, W)
+
+
+def _reference_pack_csr(indptr: np.ndarray, indices: np.ndarray,
+                        data: np.ndarray,
+                        schedule: TileSchedule) -> tuple[np.ndarray,
+                                                         np.ndarray]:
+    """Loop oracle for `pack_csr` (per-slot copy loop)."""
+    T, R, W = schedule.n_tiles, schedule.rows_per_tile, schedule.width
+    vals = np.zeros((T, R, W), np.asarray(data).dtype)
     cols = np.zeros((T, R, W), np.int32)
     for t in range(T):
         for j in range(R):
@@ -175,7 +407,24 @@ def pack_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
 
 def coverage_counts(schedule: TileSchedule, sizes: np.ndarray) -> np.ndarray:
     """How many times each item's work units appear in the schedule; a valid
-    schedule covers every unit exactly once (tests/test_tiling.py)."""
+    schedule covers every unit exactly once (tests/test_tiling.py).
+
+    Vectorized: each scheduled unit's global position is
+    offsets[item] + seg_start + pos; the histogram is one `bincount`.
+    `_reference_coverage_counts` is the loop oracle."""
+    sizes = np.asarray(sizes, np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    total = int(offsets[-1])
+    item_f = schedule.item_id.reshape(-1).astype(np.int64)
+    start_f = schedule.seg_start.reshape(-1).astype(np.int64)
+    slot, pos = _unit_coords(schedule)
+    where = offsets[item_f[slot]] + start_f[slot] + pos
+    return np.bincount(where, minlength=total).astype(np.int64)
+
+
+def _reference_coverage_counts(schedule: TileSchedule,
+                               sizes: np.ndarray) -> np.ndarray:
+    """Loop oracle for `coverage_counts` (per-slot increment loop)."""
     sizes = np.asarray(sizes, np.int64)
     offsets = np.concatenate([[0], np.cumsum(sizes)])
     counts = np.zeros(int(offsets[-1]), np.int64)

@@ -13,8 +13,10 @@ split across W-wide segments, segments greedily packed into (T, R) slots.
 
 Kernel per level: persistent grid (T,); each step gathers frontier[cols]
 (R, W), reduces with max over W, and max-accumulates into the per-vertex
-output (split rows OR together across tiles), masked by `visited`. Grid
-steps run sequentially on a TPU core, so read-modify-write is safe.
+output (split rows OR together across tiles), masked by `visited`. The
+max-accumulation routes through the shared segmented-reduction layer
+(`core/segmented.py`): one windowed read-modify-write per tile instead of R
+scalar ones. Grid steps run sequentially on a TPU core, so the RMW is safe.
 """
 from __future__ import annotations
 
@@ -24,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.segmented import segmented_apply
 
 
 def _bfs_kernel(rowid_ref, mask_ref, cols_ref, frontier_ref, visited_ref,
@@ -40,10 +44,10 @@ def _bfs_kernel(rowid_ref, mask_ref, cols_ref, frontier_ref, visited_ref,
     visited = visited_ref[...]    # (n,) 1.0 = already visited
     hit = jnp.max(mask * frontier[cols], axis=1)  # (R,) any frontier nbr?
     rows = rowid_ref[t]     # (R,) SMEM scalars: vertex per slot, -1 pad
-    for j in range(rows.shape[0]):
-        r = jnp.clip(rows[j], 0, n_vertices - 1)
-        inc = jnp.where(rows[j] >= 0, hit[j] * (1.0 - visited[r]), 0.0)
-        out_ref[r] = jnp.maximum(out_ref[r], inc)
+    inc = hit * (1.0 - visited[jnp.clip(rows, 0, n_vertices - 1)])
+    # split adjacency lists OR together across tiles: max-accumulate through
+    # the shared segmented epilogue (padding slots masked by its one-hot)
+    segmented_apply(out_ref, rows, inc, combine="max")
 
 
 def ich_bfs_step(mask, cols, rowid, frontier, visited, n_vertices: int,

@@ -1,5 +1,10 @@
 """Public wrapper: pack the graph once (iCh schedule construction), then run
-frontier expansions / full traversals many times."""
+frontier expansions / full traversals many times.
+
+Packing uses the vectorized `core.tiling` construction and each level's
+kernel max-accumulates through the shared `core.segmented` windowed
+epilogue — no Python-level per-vertex or per-slot loops on either side.
+"""
 import functools
 
 import jax

@@ -13,8 +13,10 @@ is the price a static grid pays where the runtime would have stolen.
 
 Kernel: persistent grid (T,); each step gathers its R scheduled points from
 the (n, D) point table in VMEM, computes squared distances to the (K, D)
-centroids, and scatter-writes per-point argmin through the prefetched
-item-id schedule.
+centroids, and writes per-point argmin through the prefetched item-id
+schedule via the shared segmented-reduction layer (`core/segmented.py`,
+"store" mode): one windowed read-modify-write per tile, with uncovered
+window rows keeping their previously written assignment.
 """
 from __future__ import annotations
 
@@ -24,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.segmented import segmented_apply
 
 
 def _kmeans_kernel(rowid_ref, pts_ref, cent_ref, out_ref, *, n_points: int):
@@ -39,9 +43,9 @@ def _kmeans_kernel(rowid_ref, pts_ref, cent_ref, out_ref, *, n_points: int):
     sel = pts[jnp.clip(ids, 0, n_points - 1)]  # (R, D)
     d2 = jnp.sum((sel[:, None, :] - cent[None, :, :]) ** 2, axis=-1)  # (R, K)
     assign = jnp.argmin(d2, axis=1).astype(jnp.int32)  # (R,)
-    for j in range(ids.shape[0]):
-        r = jnp.clip(ids[j], 0, n_points - 1)
-        out_ref[r] = jnp.where(ids[j] >= 0, assign[j], out_ref[r])
+    # duplicate slots of a split point carry the same argmin, so the
+    # segmented "store" (any-wins within the window) is exact
+    segmented_apply(out_ref, ids, assign, combine="store")
 
 
 def ich_kmeans_assign(points, centroids, rowid, *, interpret: bool = False):

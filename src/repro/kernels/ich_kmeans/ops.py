@@ -1,5 +1,11 @@
 """Public wrapper: iCh schedule construction over a predicted per-point cost
-array (workloads.kmeans_rounds), then the assignment kernel many times."""
+array (workloads.kmeans_rounds), then the assignment kernel many times.
+
+Per-round re-scheduling rides the vectorized `core.tiling` path (the point
+of the O(n) construction: a fresh cost prediction every round means a fresh
+schedule every round), and the kernel writes assignments through the shared
+`core.segmented` "store" epilogue.
+"""
 import functools
 
 import jax

@@ -12,11 +12,12 @@ The kernel is a persistent-grid pallas_call: grid = (n_tiles,); each step
 loads its (R, W) value/column tile from HBM into VMEM, gathers x, reduces
 over W, and ACCUMULATES into the output rows (grid steps execute
 sequentially on a TPU core, so read-modify-write of the output is safe).
-x is kept whole in VMEM (fits for n <= ~1M fp32).
+x is kept whole in VMEM (fits for n <= ~1M fp32). The per-tile accumulation
+routes through the shared segmented-reduction layer (`core/segmented.py`):
+a one-hot matmul folds the R partial sums into one length-R output window
+instead of R scalar read-modify-writes.
 """
 from __future__ import annotations
-
-import functools
 
 import numpy as np
 
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.segmented import segmented_apply
 from repro.core.tiling import build_schedule, ich_tile_width, pack_csr
 
 __all__ = ["ich_tile_width", "pack_tiles", "ich_spmv"]
@@ -46,7 +48,7 @@ def pack_tiles(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
     return vals, cols, sched.item_id, sched.width
 
 
-def _spmv_kernel(rowid_ref, vals_ref, cols_ref, x_ref, out_ref, *, n_rows: int):
+def _spmv_kernel(rowid_ref, vals_ref, cols_ref, x_ref, out_ref):
     t = pl.program_id(0)
 
     @pl.when(t == 0)
@@ -58,17 +60,14 @@ def _spmv_kernel(rowid_ref, vals_ref, cols_ref, x_ref, out_ref, *, n_rows: int):
     x = x_ref[...]  # (n,)
     partial = jnp.sum(vals * x[cols], axis=1)  # (R,)
     rows = rowid_ref[t]  # (R,) SMEM scalars for this tile
-    # accumulate per row-slot; rows may repeat across tiles (split rows)
-    for j in range(rows.shape[0]):
-        r = jnp.clip(rows[j], 0, n_rows - 1)
-        inc = jnp.where(rows[j] >= 0, partial[j], 0.0)
-        out_ref[r] = out_ref[r] + inc
+    # rows may repeat across tiles (split rows): sum-accumulate through the
+    # shared segmented epilogue (one windowed RMW, padding masked inside)
+    segmented_apply(out_ref, rows, partial, combine="add")
 
 
 def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
     """vals/cols (T,R,W); rowid (T,R); x (n,). Returns y (n_rows,)."""
     T, R, W = vals.shape
-    kernel = functools.partial(_spmv_kernel, n_rows=n_rows)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # rowid prefetched to SMEM (the schedule)
         grid=(T,),
@@ -80,7 +79,7 @@ def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
         out_specs=pl.BlockSpec((n_rows,), lambda t, rowid: (0,)),
     )
     return pl.pallas_call(
-        kernel,
+        _spmv_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_rows,), x.dtype),
         interpret=interpret,

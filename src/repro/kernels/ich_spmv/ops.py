@@ -1,4 +1,10 @@
-"""Public wrapper: host-side iCh schedule construction + jitted kernel call."""
+"""Public wrapper: host-side iCh schedule construction + jitted kernel call.
+
+Schedule construction is the vectorized `core.tiling` path (array programs,
+no per-row Python loops) and the kernel accumulates through the shared
+`core.segmented` windowed epilogue, so both the pack-once and apply-many
+sides stay array-speed at production row counts.
+"""
 import functools
 
 import jax

@@ -5,6 +5,8 @@ import pytest
 from repro.core import policies as P
 from repro.core.simulator import simulate
 from repro.core.tiling import (
+    _reference_build_schedule, _reference_coverage_counts,
+    _reference_pack_csr, _reference_split_items,
     build_schedule, coverage_counts, ich_tile_width, pack_csr, split_items,
 )
 
@@ -35,6 +37,27 @@ def test_every_iteration_covered_exactly_once(n, zipf_a, R, seed):
 def test_empty_sizes_array_raises():
     with pytest.raises(ValueError, match="empty sizes"):
         build_schedule(np.array([], dtype=np.int64))
+
+
+def test_int32_overflow_guard_raises_instead_of_corrupting():
+    # the vectorized path runs int32 internally; out-of-range items must be
+    # rejected loudly, not silently wrapped to empty schedules
+    with pytest.raises(ValueError, match="fit int32"):
+        build_schedule(np.array([2 ** 31 + 5, 3], dtype=np.int64), width=8)
+
+
+@pytest.mark.parametrize("bad", [0, -1, -16])
+def test_nonpositive_explicit_width_raises(bad):
+    # regression: width=0 used to fall through `if width` to the band
+    # heuristic instead of being rejected
+    with pytest.raises(ValueError, match="width must be positive"):
+        build_schedule(np.array([3, 4, 5]), width=bad)
+    with pytest.raises(ValueError, match="width must be positive"):
+        _reference_build_schedule(np.array([3, 4, 5]), width=bad)
+    with pytest.raises(ValueError, match="width must be positive"):
+        split_items(np.array([3, 4, 5]), bad)
+    with pytest.raises(ValueError, match="width must be positive"):
+        _reference_split_items(np.array([3, 4, 5]), bad)
 
 
 def test_empty_rows_get_one_slot_each():
@@ -80,8 +103,38 @@ def test_width_band_monotone_and_clamped():
 
 
 def test_split_items_orders_segments_by_item():
-    segs = split_items(np.array([5, 0, 12]), width=8)
+    item, start, length = split_items(np.array([5, 0, 12]), width=8)
+    segs = list(zip(item.tolist(), start.tolist(), length.tolist()))
     assert segs == [(0, 0, 5), (1, 0, 0), (2, 0, 8), (2, 8, 4)]
+    assert segs == _reference_split_items(np.array([5, 0, 12]), width=8)
+
+
+# ------------------------------------------- vectorized vs reference oracles
+@pytest.mark.parametrize("n,zipf_a,R,W,seed", [
+    (1, 1.5, 8, None, 0), (97, 1.4, 4, None, 1), (256, 2.1, 8, 16, 2),
+    (333, 1.7, 16, 1, 3), (64, 1.3, 3, 7, 4), (500, 1.9, 8, None, 5),
+])
+def test_vectorized_construction_matches_reference(n, zipf_a, R, W, seed):
+    sizes = _random_sizes(n, zipf_a, seed)
+    vec = build_schedule(sizes, rows_per_tile=R, width=W)
+    ref = _reference_build_schedule(sizes, rows_per_tile=R, width=W)
+    assert vec.width == ref.width and vec.n_items == ref.n_items
+    np.testing.assert_array_equal(vec.item_id, ref.item_id)
+    np.testing.assert_array_equal(vec.seg_start, ref.seg_start)
+    np.testing.assert_array_equal(vec.seg_len, ref.seg_len)
+    item, start, length = split_items(sizes, vec.width)
+    assert (list(zip(item.tolist(), start.tolist(), length.tolist()))
+            == _reference_split_items(sizes, vec.width))
+    rng = np.random.default_rng(seed + 100)
+    indptr = np.concatenate([[0], np.cumsum(sizes)])
+    nnz = int(indptr[-1])
+    indices = rng.integers(0, n, nnz).astype(np.int32)
+    data = rng.standard_normal(nnz).astype(np.float32)
+    for a, b in zip(pack_csr(indptr, indices, data, vec),
+                    _reference_pack_csr(indptr, indices, data, vec)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(coverage_counts(vec, sizes),
+                                  _reference_coverage_counts(vec, sizes))
 
 
 # -------------------------------------------------------------- CSR packing
