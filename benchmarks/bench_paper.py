@@ -9,9 +9,8 @@ import numpy as np
 
 from repro.core import policies as P
 from repro.core import workloads as WL
-from repro.core.simulator import SimParams, simulate
 
-from . import common as C
+from . import common as C  # simulation goes through C.SCHED (repro.sched)
 
 
 def bench_synth(n: int = 50_000, threads=C.THREADS):

@@ -6,6 +6,11 @@ Measures, across item counts (default 10k / 100k / 1M):
     `_reference_*` loop oracle (the seed implementation) — plus the same
     comparison for `pack_csr`; outputs are asserted identical, so the
     speedup numbers can't drift away from correctness;
+  * the `repro.sched` schedule cache: a repeated `LoopScheduler.schedule()`
+    call with identical inputs must be an LRU hit that returns the
+    previously built `Schedule` object and skips construction entirely
+    (asserted on the cache counters and on object identity); warm-path
+    cost is the fingerprint hash;
   * interpret-mode step cost of the three ich_* Pallas kernels at the
     smallest size (interpret mode is Python-per-grid-step, so larger sizes
     measure the interpreter, not the kernel).
@@ -97,21 +102,52 @@ def bench_build(n: int, repeats: int) -> dict:
     }
 
 
+def bench_cache(n: int, repeats: int) -> dict:
+    """Schedule-cache behavior at n items (the serving path's reuse story).
+
+    The second `schedule()` call with identical inputs MUST be a cache hit
+    that skips construction entirely: asserted on the LRU counters (one
+    miss total) and on object identity (the very same `Schedule` comes
+    back). The warm path pays only the cost-fingerprint hash.
+    """
+    from repro.sched import LoopScheduler
+
+    sizes = workload(n)
+    sched = LoopScheduler()
+    t0 = time.perf_counter()
+    first = sched.schedule(sizes)
+    t_cold = time.perf_counter() - t0
+    assert sched.cache_stats.misses == 1 and sched.cache_stats.hits == 0
+    t_warm, again = _best(lambda: sched.schedule(sizes), repeats)
+    assert again is first, "cache hit must return the cached Schedule object"
+    assert sched.cache_stats.misses == 1, \
+        "cache hit must not re-run schedule construction"
+    assert sched.cache_stats.hits == repeats
+    return {
+        "n_items": n,
+        "cold_s": t_cold,
+        "warm_hit_s": t_warm,
+        "hit_speedup": t_cold / max(t_warm, 1e-12),
+        "hits": sched.cache_stats.hits,
+        "misses": sched.cache_stats.misses,
+    }
+
+
 def bench_kernel_step(n: int) -> dict:
     """Steady-state interpret-mode cost of one full schedule sweep for each
-    ich_* kernel (first call = trace/compile, second call timed)."""
+    ich_* kernel (first call = trace/compile, second call timed). Ops are
+    built through the `repro.sched` registry (the facade path)."""
     import jax
 
-    from repro.kernels.ich_bfs.ops import IChBfs
-    from repro.kernels.ich_kmeans.ops import IChKMeans
-    from repro.kernels.ich_spmv.ops import IChSpmv
+    from repro.sched import LoopScheduler
 
+    sched = LoopScheduler(rows_per_tile=ROWS_PER_TILE)
     rng = np.random.default_rng(3)
     sizes = workload(n)
     indptr, indices, data = _csr(sizes)
     out = {"n_items": n}
 
-    spmv = IChSpmv(indptr, indices, data, rows_per_tile=ROWS_PER_TILE)
+    spmv = sched.build("spmv", indptr, indices, data)
     x = rng.standard_normal(sizes.size).astype(np.float32)
     jax.block_until_ready(spmv(x, interpret=True))  # trace + compile
     t0 = time.perf_counter()
@@ -121,7 +157,7 @@ def bench_kernel_step(n: int) -> dict:
     out["ich_spmv"] = {"total_s": dt, "n_tiles": int(n_tiles),
                        "per_tile_us": 1e6 * dt / n_tiles}
 
-    bfs = IChBfs(indptr, indices, rows_per_tile=ROWS_PER_TILE)
+    bfs = sched.build("bfs", indptr, indices)
     frontier = (rng.random(sizes.size) < 0.05).astype(np.float32)
     visited = frontier.copy()
     jax.block_until_ready(bfs.step(frontier, visited, interpret=True))
@@ -131,8 +167,7 @@ def bench_kernel_step(n: int) -> dict:
     out["ich_bfs"] = {"total_s": dt, "n_tiles": bfs.schedule.n_tiles,
                       "per_tile_us": 1e6 * dt / bfs.schedule.n_tiles}
 
-    km = IChKMeans(np.maximum(sizes.astype(np.float64), 1.0),
-                   rows_per_tile=ROWS_PER_TILE)
+    km = sched.build("kmeans", np.maximum(sizes.astype(np.float64), 1.0))
     pts = rng.standard_normal((sizes.size, 8)).astype(np.float32)
     cent = rng.standard_normal((16, 8)).astype(np.float32)
     jax.block_until_ready(km(pts, cent, interpret=True))
@@ -168,6 +203,13 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
               f"{row['build_vec_s']:.5f},{row['build_ref_s']:.5f},"
               f"{row['build_speedup']:.1f},{row['pack_vec_s']:.5f},"
               f"{row['pack_ref_s']:.5f},{row['pack_speedup']:.1f}")
+    report["schedule_cache"] = []
+    for n in sizes:
+        row = bench_cache(n, repeats)
+        report["schedule_cache"].append(row)
+        print(f"cache,n={row['n_items']},cold_s={row['cold_s']:.5f},"
+              f"warm_hit_s={row['warm_hit_s']:.6f},"
+              f"hit_speedup={row['hit_speedup']:.1f}")
     if kernel_step:
         ks = bench_kernel_step(sizes[0])
         report["kernel_step_interpret"] = ks

@@ -5,6 +5,9 @@ parameter grid (paper §6.1) and speedup = T(app, guided, 1) / T(app, s, p)
 (eq. 9). Nested-loop apps (BFS levels, K-Means rounds) sum per-loop
 makespans (fork-join barrier between loops), with fresh scheduler state per
 loop, and grid parameters chosen once per app (as a user would).
+
+Simulation routes through the `repro.sched.LoopScheduler` facade (its
+direct simulator pass-through — policy sweeps need no tile construction).
 """
 from __future__ import annotations
 
@@ -13,11 +16,13 @@ import time
 import numpy as np
 
 from repro.core import policies as P
-from repro.core.simulator import SimParams, simulate
+from repro.core.simulator import SimParams
+from repro.sched import LoopScheduler
 
 THREADS = (1, 2, 4, 8, 14, 28)
 METHODS = ("guided", "dynamic", "taskloop", "binlpt", "stealing", "ich")
 PARAMS = SimParams()
+SCHED = LoopScheduler(sim_params=PARAMS)
 
 
 def method_grid(name: str, p: int) -> list[P.Policy]:
@@ -31,7 +36,8 @@ def app_time(loops: list[np.ndarray], p: int, pol: P.Policy,
     total = 0.0
     for i, costs in enumerate(loops):
         est = estimates[i] if estimates is not None else None
-        total += simulate(costs, p, pol, params, estimate=est).makespan
+        total += SCHED.simulate(costs, policy=pol, p=p, params=params,
+                                estimate=est).makespan
     return total
 
 

@@ -1,35 +1,111 @@
-"""Quickstart: the paper's scheduler family on an irregular loop.
+"""Quickstart: the unified `repro.sched` scheduler API.
 
-Runs the iCh scheduler (and every baseline) on the paper's synthetic
-exponential workload, prints the speedup table and iCh's adaptive state —
-then shows the same algorithm balancing MoE experts.
+One facade, four backends. A `LoopScheduler` turns a per-item cost array
+into a `Schedule` that (a) replays through the discrete-event simulator,
+(b) drives the real threaded executor, and (c) lowers to the tile layout
+the Pallas kernels consume — and its workload registry builds the kernels
+themselves. Repeated requests hit the LRU schedule cache.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Runs entirely on CPU (kernels in interpret mode); CI executes it
+end-to-end.
 """
 import numpy as np
 
-from repro.core import paper_policy_grid, simulate, SimParams
+from repro import sched
 from repro.core import workloads as WL
 
 
-def main():
-    costs = WL.synth_exp(30_000, increasing=False)
-    params = SimParams()
-    p = 28
-    t1 = simulate(costs, 1, [g for g in paper_policy_grid(1) if g.name == "guided"][0], params).makespan
+def policy_table(scheduler: sched.LoopScheduler, costs: np.ndarray, p: int):
+    """The paper's Table-2 sweep through the facade's simulator backend."""
+    t1 = scheduler.simulate(costs, policy=sched.guided(1), p=1).makespan
     print(f"workload: synth Exp-Decreasing, n={len(costs)}, p={p}")
     print(f"{'policy':16s} {'speedup':>8s} {'steals':>7s} {'chunks':>7s}")
     best = {}
-    for pol in paper_policy_grid(p):
-        r = simulate(costs, p, pol, params)
+    for pol in sched.paper_policy_grid(p):
+        r = scheduler.simulate(costs, policy=pol, p=p)
         sp = t1 / r.makespan
         best[pol.name] = max(best.get(pol.name, 0.0), sp)
         print(f"{pol.label():16s} {sp:8.2f} {r.steals:7d} {r.chunks:7d}")
-    print("\nbest per method:", {k: round(v, 2) for k, v in best.items()})
-    r = simulate(costs, p, [g for g in paper_policy_grid(p) if g.name == "ich"][0],
-                 params)
+    print("best per method:", {k: round(v, 2) for k, v in best.items()})
+    r = scheduler.simulate(costs, policy=sched.ich(), p=p)
     print("iCh final d_i (chunk divisors):", np.round(r.ds, 2))
     print("iCh k_i (per-worker progress estimates):", np.round(r.ks, 1))
+
+
+def one_schedule_three_backends(scheduler: sched.LoopScheduler):
+    """The same Schedule object across simulator, executor, and lowering."""
+    rng = np.random.default_rng(0)
+    sizes = np.minimum(rng.zipf(1.8, 2000), 500).astype(np.int64)
+    s = scheduler.schedule(sizes)                       # construct (cached)
+    print(f"\nschedule: {s.n_items} items -> {s.n_tiles} tiles of "
+          f"{s.rows_per_tile} x W={s.width}")
+
+    # (a) simulator: replay the constructed tiles chunk-for-chunk
+    rep = s.replay()
+    sim_work = np.array([w for (_, _, _, w) in rep.chunk_log])
+    assert np.abs(sim_work - s.tile_cost()).max() < 1e-6
+    print(f"simulator replay: {rep.chunks} chunks == {s.n_tiles} tiles, "
+          f"per-tile work matches prediction")
+
+    # (b) threaded executor: every work unit exactly once, same tile chunks
+    import threading
+    hits = np.zeros(int(sizes.sum()), np.int64)
+    lock = threading.Lock()
+
+    def body(u):
+        with lock:
+            hits[u] += 1
+
+    st = s.parallel_for_units(body, p=4)
+    assert (hits == 1).all() and st.chunks == s.n_tiles
+    print(f"executor: {st.chunks} chunks on 4 threads, "
+          "every unit executed exactly once")
+
+    # (c) lowering: the Pallas-facing tile layout
+    tiles = s.lower()
+    print(f"lowered TileSchedule: item_id {tiles.item_id.shape}, "
+          f"width {tiles.width}")
+
+    # LRU cache: an identical request skips construction entirely
+    again = scheduler.schedule(sizes)
+    assert again is s
+    print(f"schedule cache: {scheduler.cache_stats}")
+
+
+def registry_kernels(scheduler: sched.LoopScheduler):
+    """Registered workloads: kernels built from raw inputs, no ops classes."""
+    print("\nregistered workloads:", sched.registered())
+    rng = np.random.default_rng(1)
+    n = 256
+    row_nnz = np.minimum(rng.zipf(1.8, n), 60).astype(np.int64)
+    indptr = np.concatenate([[0], np.cumsum(row_nnz)])
+    indices = rng.integers(0, n, int(indptr[-1])).astype(np.int32)
+    data = rng.standard_normal(int(indptr[-1])).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+
+    from repro.kernels.ich_spmv.ref import spmv_ref
+    spmv = scheduler.build("spmv", indptr, indices, data)
+    y = np.asarray(spmv(x, interpret=True))
+    np.testing.assert_allclose(y, spmv_ref(indptr, indices, data, x),
+                               atol=1e-4, rtol=1e-4)
+    print(f"spmv kernel (interpret): y[:4] = {np.round(y[:4], 3)} "
+          f"(matches reference)")
+
+    bfs = scheduler.build("bfs", indptr, indices)
+    levels = bfs.levels(0, interpret=True)
+    print(f"bfs kernel (interpret): reached "
+          f"{int((levels >= 0).sum())}/{n} vertices from source 0")
+
+
+def main():
+    scheduler = sched.LoopScheduler(p=28)
+    costs = WL.synth_exp(30_000, increasing=False)
+    policy_table(scheduler, costs, p=28)
+    one_schedule_three_backends(scheduler)
+    registry_kernels(scheduler)
+    print("\nOK")
 
 
 if __name__ == "__main__":

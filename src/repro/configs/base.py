@@ -92,7 +92,7 @@ class ArchConfig:
         return ((self.vocab_size + 255) // 256) * 256
 
     def supports(self, shape: ShapeSpec) -> bool:
-        """long_500k needs sub-quadratic sequence mixing (DESIGN.md §4)."""
+        """long_500k needs sub-quadratic sequence mixing (DESIGN.md §5)."""
         if shape.name == "long_500k":
             return self.family in ("hybrid", "ssm")
         return True

@@ -8,8 +8,10 @@ wall-clock speedup (the simulator covers scheduler quality); its job is to
 prove the *policy implementations* are operational under real concurrency:
 every iteration executes exactly once, steals happen, counters stay sane.
 
-It is also the engine behind ``sched/data_sched.py`` (per-host input-shard
-dispatch with stealing), where it runs for real in production.
+It is also the engine behind ``repro/sched/data_sched.py`` (per-host
+input-shard dispatch with stealing, wrapped by ``data/pipeline.py``), where
+it runs for real in production; the `repro.sched.LoopScheduler` facade
+reaches it through `Schedule.parallel_for` / `parallel_for_units`.
 """
 from __future__ import annotations
 

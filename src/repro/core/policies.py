@@ -19,6 +19,11 @@ from typing import Optional
 
 import numpy as np
 
+# The unified iCh epsilon (paper Table 2; tuned default shared with the
+# tiling layer and kernel wrappers). Lives in the dependency-free
+# `repro.sched.defaults` so both sides of the facade import one constant.
+from repro.sched.defaults import ICH_EPS
+
 CENTRAL = "central"
 DISTRIBUTED = "distributed"
 
@@ -32,7 +37,7 @@ class Policy:
     chunk: int = 1
     # distributed-queue parameters
     adaptive: bool = False  # True only for iCh
-    eps: float = 0.25  # iCh epsilon (paper: 25%, 33%, 50%)
+    eps: float = ICH_EPS  # iCh epsilon (paper grid: 25%, 33%, 50%)
     # pretiled chunk policies (taskloop / binlpt / static / pretiled)
     num_tasks: Optional[int] = None  # taskloop: num_tasks = p
     binlpt_chunks: Optional[int] = None  # binlpt: max number of chunks
@@ -94,7 +99,7 @@ def stealing(chunk: int = 1) -> Policy:
     return Policy("stealing", DISTRIBUTED, chunk=chunk, adaptive=False)
 
 
-def ich(eps: float = 0.25) -> Policy:
+def ich(eps: float = ICH_EPS) -> Policy:
     """iCh: adaptive chunk work-stealing (the paper's contribution)."""
     return Policy("ich", DISTRIBUTED, adaptive=True, eps=eps)
 

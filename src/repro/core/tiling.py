@@ -39,6 +39,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.sched.defaults import ICH_EPS
+
 # ---------------------------------------------------------------------------
 # Construction workspace: schedule construction is a per-request operation in
 # a serving path, so its temporaries (a few MB per million items) are reused
@@ -78,7 +80,7 @@ def _ws_iota(n: int, dtype=np.int32) -> np.ndarray:
     return buf[:n]
 
 
-def ich_tile_width(sizes: np.ndarray, eps: float = 0.33,
+def ich_tile_width(sizes: np.ndarray, eps: float = ICH_EPS,
                    min_w: int = 8, max_w: int = 512) -> int:
     """Pick the tile width with the paper's band (eqs. 1-3, 8).
 
@@ -266,7 +268,7 @@ def _check_width(width: int | None) -> int | None:
 
 
 def build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
-                   width: int | None = None, eps: float = 0.33,
+                   width: int | None = None, eps: float = ICH_EPS,
                    min_w: int = 8, max_w: int = 512) -> TileSchedule:
     """Band -> W -> segments -> greedy packing into (T, R) slots.
 
@@ -287,7 +289,7 @@ def build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
 
 
 def _reference_build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
-                              width: int | None = None, eps: float = 0.33,
+                              width: int | None = None, eps: float = ICH_EPS,
                               min_w: int = 8,
                               max_w: int = 512) -> TileSchedule:
     """Loop oracle for `build_schedule` (per-segment placement loop)."""

@@ -18,8 +18,8 @@ import threading
 
 import numpy as np
 
-from ..core import executor as EX
-from ..core import policies as P
+from ..sched.data_sched import ShardDispatcher
+from ..sched.defaults import ICH_EPS
 
 
 def synthetic_tokens(batch: int, seq: int, vocab: int, step: int,
@@ -37,17 +37,17 @@ class HostIngestStats:
     steals: int = 0
 
 
-class IChDataDispatcher:
+class IChDataDispatcher(ShardDispatcher):
     """Dispatch `n_examples` ingest work items across `n_hosts` worker
-    threads under the iCh policy (adaptive chunk + stealing)."""
+    threads under the iCh policy (adaptive chunk + stealing). Thin wrapper
+    over the scheduler API's dispatch layer (`repro/sched/data_sched.py`)."""
 
-    def __init__(self, n_hosts: int = 4, eps: float = 0.25):
-        self.n_hosts = n_hosts
-        self.policy = P.ich(eps)
+    def __init__(self, n_hosts: int = 4, eps: float = ICH_EPS):
+        super().__init__(n_hosts=n_hosts, eps=eps)
 
     def ingest(self, n_examples: int, read_fn) -> HostIngestStats:
         """read_fn(i) ingests example i (exactly once, any host)."""
-        stats = EX.parallel_for(n_examples, read_fn, self.n_hosts, self.policy)
+        stats = self.dispatch(n_examples, read_fn)
         return HostIngestStats(chunks=stats.chunks, steals=stats.steals)
 
 

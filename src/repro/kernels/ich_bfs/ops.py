@@ -1,69 +1,31 @@
-"""Public wrapper: pack the graph once (iCh schedule construction), then run
-frontier expansions / full traversals many times.
+"""Deprecated shim: `IChBfs` is now a thin wrapper over the `repro.sched`
+registry ("bfs" workload). Use the facade instead:
 
-Packing uses the vectorized `core.tiling` construction and each level's
-kernel max-accumulates through the shared `core.segmented` windowed
-epilogue — no Python-level per-vertex or per-slot loops on either side.
+    from repro.sched import default_scheduler
+    bfs = default_scheduler().build("bfs", indptr, indices)
+
+The shim produces bit-identical packing/outputs (same construction path,
+same kernel) and shares the facade's schedule cache; it emits a
+`DeprecationWarning` and will be removed once downstream callers migrate.
 """
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.tiling import build_schedule, pack_csr
-
-from .ich_bfs import ich_bfs_step
+from repro.core import policies as P
+from repro.sched.api import default_scheduler
+from repro.sched.defaults import ICH_EPS
+from repro.sched.kernels import BfsOp
 
 
-class IChBfs:
-    """CSR graph (rows = in-neighbor lists) packed into iCh work tiles.
-
-    The degree array is the per-vertex cost the paper's BFS workload
-    exposes; the schedule (width, splitting, packing) is built from it once
-    and reused for every level of every traversal.
-    """
+class IChBfs(BfsOp):
+    """CSR graph (rows = in-neighbor lists) packed into iCh work tiles."""
 
     def __init__(self, indptr, indices, *, rows_per_tile: int = 8,
-                 eps: float = 0.33, width: int = None):
-        indptr = np.asarray(indptr)
-        indices = np.asarray(indices)
-        self.n = len(indptr) - 1
-        self.schedule = build_schedule(np.diff(indptr),
-                                       rows_per_tile=rows_per_tile,
-                                       width=width, eps=eps)
-        mask, cols = pack_csr(indptr, indices,
-                              np.ones(len(indices), np.float32),
-                              self.schedule)
-        self.mask = jnp.asarray(mask)
-        self.cols = jnp.asarray(cols)
-        self.rowid = jnp.asarray(self.schedule.item_id)
-        self._jitted = {}  # interpret mode -> jitted step (compile once)
-
-    def step(self, frontier, visited, interpret: bool | None = None):
-        """One frontier expansion; indicator in, indicator out."""
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        if interpret not in self._jitted:
-            self._jitted[interpret] = jax.jit(functools.partial(
-                ich_bfs_step, n_vertices=self.n, interpret=interpret))
-        return self._jitted[interpret](self.mask, self.cols, self.rowid,
-                                       jnp.asarray(frontier, jnp.float32),
-                                       jnp.asarray(visited, jnp.float32))
-
-    def levels(self, source: int = 0,
-               interpret: bool | None = None) -> np.ndarray:
-        """Full traversal: level per vertex (-1 = unreached)."""
-        level = np.full(self.n, -1, np.int32)
-        level[source] = 0
-        frontier = np.zeros(self.n, np.float32)
-        frontier[source] = 1.0
-        visited = frontier.copy()
-        depth = 0
-        while frontier.any():
-            nxt = np.asarray(self.step(frontier, visited, interpret))
-            depth += 1
-            level[nxt > 0] = depth
-            visited = np.maximum(visited, nxt)
-            frontier = nxt
-        return level
+                 eps: float = ICH_EPS, width: int = None):
+        warnings.warn(
+            "IChBfs is deprecated; use repro.sched: "
+            "default_scheduler().build('bfs', indptr, indices)",
+            DeprecationWarning, stacklevel=2)
+        built = default_scheduler().build(
+            "bfs", indptr, indices, policy=P.ich(eps),
+            rows_per_tile=rows_per_tile, width=width)
+        self.__dict__.update(built.__dict__)

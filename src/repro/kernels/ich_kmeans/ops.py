@@ -1,47 +1,38 @@
-"""Public wrapper: iCh schedule construction over a predicted per-point cost
-array (workloads.kmeans_rounds), then the assignment kernel many times.
+"""Deprecated shim: `IChKMeans` is now a thin wrapper over the `repro.sched`
+registry ("kmeans" workload). Use the facade instead:
 
-Per-round re-scheduling rides the vectorized `core.tiling` path (the point
-of the O(n) construction: a fresh cost prediction every round means a fresh
-schedule every round), and the kernel writes assignments through the shared
-`core.segmented` "store" epilogue.
+    from repro.sched import default_scheduler
+    km = default_scheduler().build("kmeans", predicted_costs)
+
+The shim produces bit-identical schedules/outputs (same construction path,
+same kernel) and shares the facade's schedule cache; it emits a
+`DeprecationWarning` and will be removed once downstream callers migrate.
 """
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core import policies as P
+from repro.sched.api import LoopScheduler
+from repro.sched.costs import quantize_costs  # noqa: F401  (legacy re-export)
+from repro.sched.defaults import ICH_EPS
+from repro.sched.kernels import KMeansOp
 
-from repro.core.tiling import build_schedule
-
-from .ich_kmeans import ich_kmeans_assign
-
-
-def quantize_costs(costs: np.ndarray) -> np.ndarray:
-    """Predicted float costs -> integer work units (>= 1 per point)."""
-    return np.maximum(np.ceil(np.asarray(costs, np.float64)), 1.0).astype(
-        np.int64)
+# Cache-less on purpose: K-Means re-predicts costs every round, so every
+# schedule is one-shot — caching would only retain dead entries in a
+# process-global LRU (the legacy class pinned nothing). Matrix/graph
+# workloads (spmv/bfs shims) DO share the default scheduler's cache.
+_SHIM_SCHED = LoopScheduler(cache_size=0)
 
 
-class IChKMeans:
+class IChKMeans(KMeansOp):
     """Schedule once per round's cost prediction, assign many times."""
 
-    def __init__(self, costs, *, rows_per_tile: int = 8, eps: float = 0.33,
+    def __init__(self, costs, *, rows_per_tile: int = 8, eps: float = ICH_EPS,
                  width: int = None):
-        self.sizes = quantize_costs(costs)
-        self.n = len(self.sizes)
-        self.schedule = build_schedule(self.sizes,
-                                       rows_per_tile=rows_per_tile,
-                                       width=width, eps=eps)
-        self.rowid = jnp.asarray(self.schedule.item_id)
-        self._jitted = {}  # interpret mode -> jitted assign (compile once)
-
-    def __call__(self, points, centroids, interpret: bool | None = None):
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        if interpret not in self._jitted:
-            self._jitted[interpret] = jax.jit(functools.partial(
-                ich_kmeans_assign, interpret=interpret))
-        return self._jitted[interpret](jnp.asarray(points, jnp.float32),
-                                       jnp.asarray(centroids, jnp.float32),
-                                       self.rowid)
+        warnings.warn(
+            "IChKMeans is deprecated; use repro.sched: "
+            "default_scheduler().build('kmeans', costs)",
+            DeprecationWarning, stacklevel=2)
+        built = _SHIM_SCHED.build(
+            "kmeans", costs, policy=P.ich(eps),
+            rows_per_tile=rows_per_tile, width=width)
+        self.__dict__.update(built.__dict__)

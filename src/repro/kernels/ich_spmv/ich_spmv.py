@@ -28,12 +28,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.segmented import segmented_apply
 from repro.core.tiling import build_schedule, ich_tile_width, pack_csr
+from repro.sched.defaults import ICH_EPS
 
 __all__ = ["ich_tile_width", "pack_tiles", "ich_spmv"]
 
 
 def pack_tiles(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
-               *, rows_per_tile: int = 8, width: int = None, eps: float = 0.33):
+               *, rows_per_tile: int = 8, width: int = None,
+               eps: float = ICH_EPS):
     """CSR -> (values (T,R,W), cols (T,R,W), rowid (T,R)) with row splitting.
 
     Thin wrapper over the shared schedule-construction layer

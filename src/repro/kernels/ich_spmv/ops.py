@@ -1,37 +1,31 @@
-"""Public wrapper: host-side iCh schedule construction + jitted kernel call.
+"""Deprecated shim: `IChSpmv` is now a thin wrapper over the `repro.sched`
+registry ("spmv" workload). Use the facade instead:
 
-Schedule construction is the vectorized `core.tiling` path (array programs,
-no per-row Python loops) and the kernel accumulates through the shared
-`core.segmented` windowed epilogue, so both the pack-once and apply-many
-sides stay array-speed at production row counts.
+    from repro.sched import default_scheduler
+    spmv = default_scheduler().build("spmv", indptr, indices, data)
+
+The shim produces bit-identical packing/outputs (same construction path,
+same kernel) and shares the facade's schedule cache; it emits a
+`DeprecationWarning` and will be removed once downstream callers migrate.
 """
-import functools
+import warnings
 
-import jax
-import numpy as np
+from repro.core import policies as P
+from repro.sched.api import default_scheduler
+from repro.sched.defaults import ICH_EPS
+from repro.sched.kernels import SpmvOp
 
-from .ich_spmv import ich_spmv, ich_tile_width, pack_tiles
 
-
-class IChSpmv:
+class IChSpmv(SpmvOp):
     """Pack once (iCh schedule construction), apply many times."""
 
     def __init__(self, indptr, indices, data, *, rows_per_tile: int = 8,
-                 eps: float = 0.33, width: int = None):
-        self.n_rows = len(indptr) - 1
-        vals, cols, rowid, W = pack_tiles(
-            np.asarray(indptr), np.asarray(indices), np.asarray(data),
-            rows_per_tile=rows_per_tile, width=width, eps=eps)
-        self.width = W
-        self.vals = jax.numpy.asarray(vals)
-        self.cols = jax.numpy.asarray(cols)
-        self.rowid = jax.numpy.asarray(rowid)
-        self._jitted = {}  # interpret mode -> jitted spmv (compile once)
-
-    def __call__(self, x, interpret: bool | None = None):
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        if interpret not in self._jitted:
-            self._jitted[interpret] = jax.jit(functools.partial(
-                ich_spmv, n_rows=self.n_rows, interpret=interpret))
-        return self._jitted[interpret](self.vals, self.cols, self.rowid, x)
+                 eps: float = ICH_EPS, width: int = None):
+        warnings.warn(
+            "IChSpmv is deprecated; use repro.sched: "
+            "default_scheduler().build('spmv', indptr, indices, data)",
+            DeprecationWarning, stacklevel=2)
+        built = default_scheduler().build(
+            "spmv", indptr, indices, data, policy=P.ich(eps),
+            rows_per_tile=rows_per_tile, width=width)
+        self.__dict__.update(built.__dict__)

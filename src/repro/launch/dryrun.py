@@ -134,7 +134,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
            "active_params": cfg.active_param_count()}
     if not cfg.supports(shape):
         rec["status"] = "SKIP"
-        rec["reason"] = "full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md §4)"
+        rec["reason"] = "full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md §5)"
         return _save(rec, out_dir)
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)

@@ -42,7 +42,7 @@ def init_attention(key, cfg, cross: bool = False):
 
 
 def attention_pspec(cfg, tp: int = 16):
-    """Heads over "model" when divisible; else FSDP-only (DESIGN.md §5)."""
+    """Heads over "model" when divisible; else FSDP-only (DESIGN.md §6)."""
     q_tp = "model" if (cfg.n_heads * cfg.dh) % tp == 0 and cfg.n_heads % tp == 0 else None
     kv_tp = "model" if q_tp == "model" and cfg.n_kv_heads % tp == 0 else None
     p = {

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import layers as L
+from ..sched.defaults import ICH_EPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +91,7 @@ def capacity(cfg, t_local: int, factor: float = 1.25) -> int:
 # ----------------------------------------------------------------------------
 
 def ich_update_cap_scale(counts: jnp.ndarray, cap_scale: jnp.ndarray,
-                         eps: float = 0.33, step: float = 1.5) -> jnp.ndarray:
+                         eps: float = ICH_EPS, step: float = 1.5) -> jnp.ndarray:
     """Adapt per-expert capacity scale with the paper's classification.
 
     counts: router load per expert (the k_i signal). Overloaded ("high")
@@ -133,7 +134,7 @@ def _dispatch_positions(experts_flat: jnp.ndarray, n_experts: int):
     return pos
 
 
-def moe_local(cfg, p, x, cap_scale, *, eps: float = 0.33,
+def moe_local(cfg, p, x, cap_scale, *, eps: float = ICH_EPS,
               n_local_experts: Optional[int] = None,
               local_expert_offset: int = 0,
               capacity_factor: float = 1.25,
@@ -223,7 +224,7 @@ def moe_local(cfg, p, x, cap_scale, *, eps: float = 0.33,
 
 
 def apply_moe(cfg, p, x, cap_scale, *, dist: Optional[DistContext] = None,
-              eps: float = 0.33, steal: bool = True,
+              eps: float = ICH_EPS, steal: bool = True,
               capacity_factor: float = 1.25):
     """MoE block on x (B,S,D) (or (B,1,D) decode). Returns (y, aux)."""
     B, S, D = x.shape

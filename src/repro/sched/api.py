@@ -1,0 +1,280 @@
+"""The `LoopScheduler` facade and the `Schedule` it hands out.
+
+One object per constructed schedule, three consumers (DESIGN.md §3):
+
+* ``Schedule.simulate()`` / ``Schedule.replay()`` — the discrete-event
+  simulator (`core/simulator.py`): `simulate` runs the schedule's policy
+  over the per-item cost array; `replay` re-dispatches the constructed
+  tiles chunk-for-chunk (`policies.pretiled` over flattened work units),
+  which is the simulator-side ground truth for what the Pallas kernels
+  will execute.
+* ``Schedule.parallel_for()`` / ``Schedule.parallel_for_units()`` — the
+  real threaded executor (`core/executor.py`): per-item under the policy,
+  or per-work-unit under the exact tile chunking.
+* ``Schedule.lower()`` — the `TileSchedule` the Pallas kernels consume
+  (`core/tiling.py`; scalar-prefetched `item_id`, packed payload layout).
+
+`LoopScheduler` is the construction front-end: cost provider in, cached
+`Schedule` out, plus `build(name, *inputs)` to instantiate a registered
+workload's kernel op, and direct pass-throughs to the simulator/executor
+for policy studies that need no tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import executor as E
+from repro.core import policies as P
+from repro.core import simulator as S
+from repro.core import tiling as T
+
+from .cache import CacheStats, ScheduleCache
+from .costs import CostProvider, as_cost_provider
+from .defaults import ICH_EPS, MAX_WIDTH, MIN_WIDTH, ROWS_PER_TILE
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Schedule:
+    """An immutable constructed schedule: per-item costs + policy + tiles.
+
+    Identity semantics (eq=False): schedules compare by object identity,
+    matching the cache's `is` contract — generated field equality would
+    try to bool() ndarray comparisons and raise.
+
+    `tiles` is the (T, R) iCh tile layout; `sizes`/`costs` are the per-item
+    work units / float costs it was built from; `policy`/`p` are the
+    runtime-side defaults its simulator/executor methods use.
+    """
+
+    sizes: np.ndarray        # (n,) int64 work units per item
+    costs: np.ndarray        # (n,) float64 per-item costs
+    policy: P.Policy
+    p: int
+    tiles: T.TileSchedule
+    # simulator time model inherited from the constructing LoopScheduler
+    sim_params: S.SimParams = dataclasses.field(default_factory=S.SimParams)
+
+    # ------------------------------------------------------------- lowering
+    def lower(self) -> T.TileSchedule:
+        """The static tile schedule a Pallas kernel consumes."""
+        return self.tiles
+
+    @property
+    def n_items(self) -> int:
+        return int(self.sizes.size)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tiles.n_tiles
+
+    @property
+    def rows_per_tile(self) -> int:
+        return self.tiles.rows_per_tile
+
+    @property
+    def width(self) -> int:
+        return self.tiles.width
+
+    @property
+    def item_id(self) -> np.ndarray:
+        """(T, R) scalar-prefetch schedule (-1 = padding slot)."""
+        return self.tiles.item_id
+
+    # ------------------------------------------- work-unit space utilities
+    def unit_ranges(self) -> np.ndarray:
+        """(T, 2) [begin, end) tile chunks in flattened work-unit space."""
+        return self.tiles.slot_ranges()
+
+    def unit_costs(self) -> np.ndarray:
+        """Per-work-unit cost array that `unit_ranges` indexes into."""
+        return self.tiles.unit_costs(self.costs, self.sizes)
+
+    def unit_to_item(self) -> np.ndarray:
+        """Flattened-unit -> item map (item i owns sizes[i] units)."""
+        return np.repeat(np.arange(self.n_items, dtype=np.int64), self.sizes)
+
+    def tile_work(self) -> np.ndarray:
+        """Work units packed into each tile, shape (T,)."""
+        return self.tiles.tile_work()
+
+    def tile_cost(self) -> np.ndarray:
+        """Predicted per-tile cost; what `replay` must reproduce."""
+        return self.tiles.tile_cost(self.costs, self.sizes)
+
+    # ------------------------------------------------------- (a) simulator
+    def simulate(self, *, p: Optional[int] = None,
+                 policy: Optional[P.Policy] = None,
+                 params: Optional[S.SimParams] = None,
+                 **kw) -> S.SimResult:
+        """Discrete-event run of `policy` (default: the schedule's) over the
+        per-item cost array."""
+        return S.simulate(self.costs, p or self.p, policy or self.policy,
+                          params if params is not None else self.sim_params,
+                          **kw)
+
+    def replay(self, *, p: Optional[int] = None,
+               params: Optional[S.SimParams] = None,
+               record_chunks: bool = True) -> S.SimResult:
+        """Replay the constructed tiles through the simulator: each tile is
+        dispatched as one explicit central-queue chunk over the flattened
+        work units. `chunk_log` ranges equal `unit_ranges()` row-for-row
+        and per-chunk work equals `tile_cost()` (the kernel/simulator
+        cross-check in benchmarks/bench_ich_kernels.py)."""
+        return S.simulate(self.unit_costs(), p or self.p,
+                          P.pretiled(self.unit_ranges()),
+                          params if params is not None else self.sim_params,
+                          record_chunks=record_chunks)
+
+    # -------------------------------------------------------- (b) executor
+    def parallel_for(self, body: Callable[[int], None], *,
+                     p: Optional[int] = None,
+                     policy: Optional[P.Policy] = None,
+                     seed: int = 0) -> E.ExecStats:
+        """Run `body(i)` for every item on real threads under `policy`
+        (default: the schedule's)."""
+        return E.parallel_for(self.n_items, body, p or self.p,
+                              policy or self.policy, seed=seed)
+
+    def parallel_for_units(self, body: Callable[[int], None], *,
+                           p: Optional[int] = None,
+                           seed: int = 0) -> E.ExecStats:
+        """Run `body(u)` for every flattened work unit on real threads,
+        dispatched in exactly the constructed tile chunks (one central-queue
+        chunk per tile — the threaded twin of `replay`)."""
+        n_units = int(self.sizes.sum())
+        return E.parallel_for(n_units, body, p or self.p,
+                              P.pretiled(self.unit_ranges()), seed=seed)
+
+
+class LoopScheduler:
+    """Facade over policies, simulator, executor, and Pallas lowering.
+
+    Construction parameters set here are the instance defaults; every
+    method takes per-call overrides. Schedules are cached (LRU) on
+    ``(cost fingerprint, full policy, p, construction params)`` — the FULL
+    frozen `Policy`, not its label, which is lossy — see `sched/cache.py`.
+
+    Memory: each cached `Schedule` pins O(n) per-item arrays plus its
+    tiles (~tens of MB at a million items), so `cache_size` bounds
+    retained memory at roughly `cache_size * max_schedule_bytes`. Size it
+    to the working set of DISTINCT cost distributions you re-present
+    (matrices, graphs, batch shapes); for one-shot schedules (a fresh
+    cost array every request, never re-seen) pass `cache_size=0` to
+    disable caching entirely.
+    """
+
+    def __init__(self, *, p: int = 8, policy: Optional[P.Policy] = None,
+                 rows_per_tile: int = ROWS_PER_TILE,
+                 min_w: int = MIN_WIDTH, max_w: int = MAX_WIDTH,
+                 cache_size: int = 32,
+                 sim_params: Optional[S.SimParams] = None):
+        self.p = int(p)
+        self.policy = policy if policy is not None else P.ich(ICH_EPS)
+        self.rows_per_tile = int(rows_per_tile)
+        self.min_w = int(min_w)
+        self.max_w = int(max_w)
+        self.sim_params = sim_params if sim_params is not None else S.SimParams()
+        self.cache = ScheduleCache(cache_size) if cache_size > 0 else None
+
+    # ------------------------------------------------- schedule construction
+    def schedule(self, costs, *, policy: Optional[P.Policy] = None,
+                 p: Optional[int] = None,
+                 rows_per_tile: Optional[int] = None,
+                 width: Optional[int] = None,
+                 eps: Optional[float] = None) -> Schedule:
+        """Construct (or fetch from cache) the schedule for `costs`.
+
+        `costs` is a `CostProvider` or a bare per-item array
+        (`as_cost_provider`). The tile width comes from the paper's band at
+        `eps` (default: the policy's epsilon for adaptive policies, else
+        the unified `ICH_EPS`) unless `width` pins it explicitly.
+
+        The cache key deliberately includes `policy` and `p` even though
+        tiles depend on neither: the returned `Schedule` carries them as
+        its simulator/executor defaults, so entries differing only in
+        runtime parameters are distinct (and bounded by `cache_size`).
+        """
+        provider = as_cost_provider(costs)
+        pol = policy if policy is not None else self.policy
+        pp = int(p if p is not None else self.p)
+        rpt = int(rows_per_tile if rows_per_tile is not None
+                  else self.rows_per_tile)
+        band_eps = float(eps if eps is not None
+                         else (pol.eps if pol.adaptive else ICH_EPS))
+        # the policy keys as the full (frozen, hashable) dataclass, not just
+        # label(): labels are lossy — taskloop's drops num_tasks, pretiled's
+        # drops the actual ranges — and would alias distinct policies onto
+        # one cache entry
+        key = (provider.fingerprint(), pol, pp, rpt, width,
+               band_eps, self.min_w, self.max_w)
+
+        def build() -> Schedule:
+            sizes = provider.sizes()
+            tiles = T.build_schedule(sizes, rows_per_tile=rpt, width=width,
+                                     eps=band_eps, min_w=self.min_w,
+                                     max_w=self.max_w)
+            return Schedule(sizes=sizes, costs=provider.costs(), policy=pol,
+                            p=pp, tiles=tiles, sim_params=self.sim_params)
+
+        if self.cache is None:
+            return build()
+        return self.cache.get_or_build(key, build)
+
+    # ----------------------------------------------------- workload registry
+    def build(self, workload: str, *inputs,
+              policy: Optional[P.Policy] = None, p: Optional[int] = None,
+              rows_per_tile: Optional[int] = None,
+              width: Optional[int] = None, eps: Optional[float] = None):
+        """Instantiate a registered workload's kernel op from raw inputs.
+
+        Looks up `workload` in the registry (`sched.register` /
+        `sched.get`), derives its cost provider from `inputs`, routes the
+        schedule through the cache, and hands both to the entry's builder.
+        """
+        from . import registry
+        entry = registry.get(workload)
+        provider = entry.costs(*inputs)
+        s = self.schedule(provider, policy=policy, p=p,
+                          rows_per_tile=rows_per_tile, width=width, eps=eps)
+        return entry.build(s, *inputs)
+
+    # --------------------------------------------- direct backend shortcuts
+    def simulate(self, costs, *, policy: Optional[P.Policy] = None,
+                 p: Optional[int] = None,
+                 params: Optional[S.SimParams] = None,
+                 **kw) -> S.SimResult:
+        """Simulator pass-through for policy studies that need no tiles
+        (the paper-figure benchmarks); `costs` is per-ITEM here."""
+        return S.simulate(np.asarray(costs, np.float64),
+                          p or self.p, policy or self.policy,
+                          params if params is not None else self.sim_params,
+                          **kw)
+
+    def parallel_for(self, n: int, body: Callable[[int], None], *,
+                     policy: Optional[P.Policy] = None,
+                     p: Optional[int] = None, seed: int = 0) -> E.ExecStats:
+        """Threaded-executor pass-through: `body(i)` for i in [0, n)."""
+        return E.parallel_for(n, body, p or self.p, policy or self.policy,
+                              seed=seed)
+
+    @property
+    def cache_stats(self) -> CacheStats:
+        return self.cache.stats if self.cache is not None else CacheStats()
+
+
+_DEFAULT: Optional[LoopScheduler] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_scheduler() -> LoopScheduler:
+    """Process-wide facade instance (one shared schedule cache) — what the
+    deprecation shims and the serving path use."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = LoopScheduler()
+        return _DEFAULT

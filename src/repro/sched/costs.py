@@ -1,0 +1,157 @@
+"""Cost providers: how a workload tells the scheduler what its items cost.
+
+Every scheduling decision in this repo starts from a per-item cost array —
+nnz per CSR row, in-degree per vertex, predicted cost per K-Means point.
+`CostProvider` is the small protocol the `LoopScheduler` facade consumes:
+
+* ``sizes()``  -> integer work units per item (drives tile construction;
+  zero is allowed — a zero-size item still gets an output slot);
+* ``costs()``  -> float per-item costs (drives the simulator's time model);
+* ``fingerprint()`` -> stable content hash, the schedule-cache key part.
+
+Three concrete providers cover the paper's applications: `NnzCosts` (CSR
+matrix row lengths), `DegreeCosts` (graph adjacency-list lengths), and
+`ExplicitCosts` (any per-item array; float arrays are quantized to work
+units the same way the K-Means wrapper always did). `as_cost_provider`
+lets facade callers pass a bare ndarray anywhere a provider is expected.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class CostProvider(Protocol):
+    """Per-item work description consumed by `LoopScheduler.schedule`."""
+
+    def sizes(self) -> np.ndarray:
+        """Integer work units per item, shape (n,). May contain zeros."""
+        ...
+
+    def costs(self) -> np.ndarray:
+        """Float per-item costs for the simulator's time model, shape (n,)."""
+        ...
+
+    def fingerprint(self) -> str:
+        """Stable content hash; equal inputs must produce equal values."""
+        ...
+
+
+def _digest(*arrays: np.ndarray) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def quantize_costs(costs: np.ndarray) -> np.ndarray:
+    """Predicted float costs -> integer work units (>= 1 per item)."""
+    return np.maximum(np.ceil(np.asarray(costs, np.float64)), 1.0).astype(
+        np.int64)
+
+
+class ExplicitCosts:
+    """A bare per-item cost array.
+
+    Integer arrays are taken as work units verbatim (zeros allowed — the
+    empty-CSR-row case); float arrays are the simulator-facing costs and
+    are quantized to `>= 1` work units for tile construction, exactly like
+    the K-Means wrapper's predicted-cost path.
+
+    Only the fingerprint is computed eagerly; `sizes()`/`costs()`
+    materialize on first use, so a schedule-cache HIT pays the hash and
+    nothing else. Materialized arrays are copies — a cached `Schedule`
+    never aliases a caller-mutable buffer. Do not mutate the input array
+    between construction and the first `sizes()`/`costs()` call (the
+    fingerprint describes the content at construction time).
+    """
+
+    def __init__(self, values: np.ndarray):
+        values = np.asarray(values)
+        if values.ndim != 1:
+            raise ValueError(f"per-item costs must be 1-D, got {values.shape}")
+        if not (np.issubdtype(values.dtype, np.integer)
+                or np.issubdtype(values.dtype, np.floating)):
+            raise TypeError(f"cost array must be numeric, got {values.dtype}")
+        self._values = values
+        self._sizes = None
+        self._costs = None
+        self._fp = f"explicit:{_digest(values)}"
+
+    def _materialize(self) -> None:
+        values = self._values
+        # astype copies (default copy=True) even for matching dtypes: the
+        # results outlive this call inside LRU-cached Schedule objects and
+        # must not alias caller-mutable buffers
+        if np.issubdtype(values.dtype, np.integer):
+            self._sizes = values.astype(np.int64)
+            self._costs = values.astype(np.float64)
+        else:
+            self._costs = values.astype(np.float64)
+            self._sizes = quantize_costs(self._costs)
+        self._values = None  # drop the caller-buffer reference
+
+    def sizes(self) -> np.ndarray:
+        if self._sizes is None:
+            self._materialize()
+        return self._sizes
+
+    def costs(self) -> np.ndarray:
+        if self._costs is None:
+            self._materialize()
+        return self._costs
+
+    def fingerprint(self) -> str:
+        return self._fp
+
+
+class NnzCosts:
+    """Per-row nonzero counts of a CSR matrix: cost[i] = indptr[i+1] -
+    indptr[i]. The paper's SpMV workload (cost ~ row nnz).
+
+    Fingerprint eager, `sizes()` lazy — same cache-hit economics and
+    no-mutation window as `ExplicitCosts`."""
+
+    _kind = "nnz"
+
+    def __init__(self, indptr: np.ndarray):
+        indptr = np.asarray(indptr)
+        if indptr.ndim != 1 or indptr.size < 1:
+            raise ValueError(f"indptr must be 1-D non-empty, got {indptr.shape}")
+        self._indptr = indptr
+        self._sizes = None
+        self._fp = f"{self._kind}:{_digest(indptr)}"
+
+    def sizes(self) -> np.ndarray:
+        if self._sizes is None:
+            # np.diff allocates fresh memory: no caller-buffer aliasing
+            self._sizes = np.diff(self._indptr).astype(np.int64, copy=False)
+            self._indptr = None
+        return self._sizes
+
+    def costs(self) -> np.ndarray:
+        return self.sizes().astype(np.float64)
+
+    def fingerprint(self) -> str:
+        return self._fp
+
+
+class DegreeCosts(NnzCosts):
+    """Per-vertex degree of a CSR graph (row u = u's neighbor list): the
+    paper's BFS per-vertex cost. Structurally `NnzCosts`; kept distinct so
+    registry entries and fingerprints name the workload they describe."""
+
+    _kind = "degree"
+
+
+def as_cost_provider(costs) -> CostProvider:
+    """Coerce facade inputs: a provider passes through, an array wraps."""
+    if isinstance(costs, CostProvider):
+        return costs
+    return ExplicitCosts(costs)

@@ -1,0 +1,85 @@
+"""Per-host input-shard dispatch with stealing — the data-path consumer of
+the threaded executor.
+
+This is the module `core/executor.py` runs for real in production: the
+global batch is a loop over example shards, each ingest host owns a
+contiguous shard range (distributed deques), chunk sizes adapt with iCh's
+band classification, and idle hosts steal shard ranges from stragglers
+(slow disks / hot nodes). `data/pipeline.py` wraps this dispatcher in its
+double-buffered synthetic pipeline.
+
+When per-shard costs are known (byte counts, historical read times), the
+dispatcher routes them through the `LoopScheduler` facade so the schedule
+is constructed once and reused across steps via the shared LRU cache —
+the same pack-once/apply-many pattern the kernels use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import executor as E
+from repro.core import policies as P
+
+from .api import LoopScheduler, default_scheduler
+from .defaults import ICH_EPS
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    chunks: int = 0
+    steals: int = 0
+
+    @classmethod
+    def from_exec(cls, stats: E.ExecStats) -> "DispatchStats":
+        return cls(chunks=stats.chunks, steals=stats.steals)
+
+
+class ShardDispatcher:
+    """Dispatch ingest work items across `n_hosts` worker threads under the
+    iCh policy (adaptive chunk + stealing)."""
+
+    def __init__(self, n_hosts: int = 4, eps: float = ICH_EPS,
+                 scheduler: Optional[LoopScheduler] = None):
+        self.n_hosts = int(n_hosts)
+        self.policy = P.ich(eps)
+        self._scheduler = scheduler
+
+    @property
+    def scheduler(self) -> LoopScheduler:
+        return self._scheduler or default_scheduler()
+
+    def dispatch(self, n_shards: int,
+                 read_fn: Callable[[int], None]) -> DispatchStats:
+        """read_fn(i) ingests shard i (exactly once, any host)."""
+        stats = self.scheduler.parallel_for(
+            n_shards, read_fn, p=self.n_hosts, policy=self.policy)
+        return DispatchStats.from_exec(stats)
+
+    def dispatch_weighted(self, shard_costs: np.ndarray,
+                          read_fn: Callable[[int], None]) -> DispatchStats:
+        """Cost-aware dispatch: shards with known per-shard costs (byte
+        counts, historical read times) are cut into equal-work contiguous
+        chunks (the BinLPT law) offered heaviest-first, so no host starts
+        on a light chunk while a heavy one waits. The chunk list is
+        memoized in the facade's LRU cache — a repeated cost array across
+        steps skips chunking entirely; `read_fn` runs exactly once per
+        shard either way."""
+        costs = np.asarray(shard_costs, np.float64)
+        from .costs import _digest
+
+        def chunk():
+            return tuple(P.pretile(P.binlpt(4 * self.n_hosts), costs,
+                                   self.n_hosts))
+
+        cache = self.scheduler.cache
+        if cache is None:
+            chunks = chunk()
+        else:
+            chunks = cache.get_or_build(
+                ("data_sched", _digest(costs), self.n_hosts), chunk)
+        stats = self.scheduler.parallel_for(
+            len(costs), read_fn, p=self.n_hosts, policy=P.pretiled(chunks))
+        return DispatchStats.from_exec(stats)

@@ -1,0 +1,26 @@
+"""Shared scheduler defaults — the single source of truth for tuned values.
+
+This module is imported by BOTH sides of the stack (`repro.core` below the
+facade, kernels/serving above it), so it must stay dependency-free: no
+numpy, no jax, no intra-repo imports. That is what lets `core/policies.py`
+import the constant without a circular import through the `repro.sched`
+package init.
+"""
+
+# The paper evaluates iCh at eps in {25%, 33%, 50%} (Table 2) and finds the
+# method insensitive within the band (eq. 10, Fig. 7); 33% is the midpoint
+# the TPU schedule-construction layer was tuned with (DESIGN.md §2: the band
+# edge mu*(1+eps) picks the tile width) and is what every kernel op shipped
+# with. It is now the one default everywhere — the runtime policy
+# (`core/policies.py:ich`), schedule construction (`core/tiling.py`), the
+# kernel wrappers, the MoE balancer, and the serving engine all import it.
+ICH_EPS = 0.33
+
+# Segment slots per tile (R) for constructed schedules: 8 keeps the one-hot
+# epilogue matmul (R, R) tiny while giving splitting enough slots to spread
+# a heavy item (DESIGN.md §2.5).
+ROWS_PER_TILE = 8
+
+# Tile-width clamp for `ich_tile_width` (work units per segment slot).
+MIN_WIDTH = 8
+MAX_WIDTH = 512

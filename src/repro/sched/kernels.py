@@ -1,0 +1,144 @@
+"""Registry-backed kernel ops for the three paper applications.
+
+Each op binds a constructed `Schedule` to a workload's payloads once
+(pack), then applies the Pallas kernel many times. These are the
+implementations behind `scheduler.build("spmv" | "bfs" | "kmeans", ...)`;
+the legacy `IChSpmv` / `IChBfs` / `IChKMeans` classes under
+`repro/kernels/ich_*/ops.py` are deprecation shims over this module.
+
+jax is imported inside the op constructors: deriving costs and constructing
+schedules is numpy-only, and the registry must be listable without paying
+the jax import.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.tiling import pack_csr
+
+from .api import Schedule
+from .costs import DegreeCosts, ExplicitCosts, NnzCosts
+from .registry import register
+
+
+def _default_interpret(interpret):
+    if interpret is None:
+        import jax
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+class SpmvOp:
+    """iCh-scheduled segmented CSR SpMV: pack once, apply many times."""
+
+    def __init__(self, schedule: Schedule, indptr, indices, data):
+        import jax.numpy as jnp
+        self.schedule = schedule
+        self.n_rows = len(indptr) - 1
+        vals, cols = pack_csr(np.asarray(indptr), np.asarray(indices),
+                              np.asarray(data), schedule.tiles)
+        self.width = schedule.width
+        self.vals = jnp.asarray(vals)
+        self.cols = jnp.asarray(cols)
+        self.rowid = jnp.asarray(schedule.item_id)
+        self._jitted = {}  # interpret mode -> jitted spmv (compile once)
+
+    def __call__(self, x, interpret: bool | None = None):
+        import jax
+        from repro.kernels.ich_spmv.ich_spmv import ich_spmv
+        interpret = _default_interpret(interpret)
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_spmv, n_rows=self.n_rows, interpret=interpret))
+        return self._jitted[interpret](self.vals, self.cols, self.rowid, x)
+
+
+class BfsOp:
+    """iCh-scheduled BFS: pack the graph once, expand frontiers many times."""
+
+    def __init__(self, schedule: Schedule, indptr, indices):
+        import jax.numpy as jnp
+        self.schedule = schedule
+        self.n = len(indptr) - 1
+        mask, cols = pack_csr(np.asarray(indptr), np.asarray(indices),
+                              np.ones(len(indices), np.float32),
+                              schedule.tiles)
+        self.mask = jnp.asarray(mask)
+        self.cols = jnp.asarray(cols)
+        self.rowid = jnp.asarray(schedule.item_id)
+        self._jitted = {}  # interpret mode -> jitted step (compile once)
+
+    def step(self, frontier, visited, interpret: bool | None = None):
+        """One frontier expansion; indicator in, indicator out."""
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.ich_bfs.ich_bfs import ich_bfs_step
+        interpret = _default_interpret(interpret)
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_bfs_step, n_vertices=self.n, interpret=interpret))
+        return self._jitted[interpret](self.mask, self.cols, self.rowid,
+                                       jnp.asarray(frontier, jnp.float32),
+                                       jnp.asarray(visited, jnp.float32))
+
+    def levels(self, source: int = 0,
+               interpret: bool | None = None) -> np.ndarray:
+        """Full traversal: level per vertex (-1 = unreached)."""
+        level = np.full(self.n, -1, np.int32)
+        level[source] = 0
+        frontier = np.zeros(self.n, np.float32)
+        frontier[source] = 1.0
+        visited = frontier.copy()
+        depth = 0
+        while frontier.any():
+            nxt = np.asarray(self.step(frontier, visited, interpret))
+            depth += 1
+            level[nxt > 0] = depth
+            visited = np.maximum(visited, nxt)
+            frontier = nxt
+        return level
+
+
+class KMeansOp:
+    """iCh-scheduled K-Means assignment over a predicted per-point cost."""
+
+    def __init__(self, schedule: Schedule, costs):
+        import jax.numpy as jnp
+        self.schedule = schedule
+        self.sizes = schedule.sizes
+        self.n = schedule.n_items
+        self.rowid = jnp.asarray(schedule.item_id)
+        self._jitted = {}  # interpret mode -> jitted assign (compile once)
+
+    def __call__(self, points, centroids, interpret: bool | None = None):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.ich_kmeans.ich_kmeans import ich_kmeans_assign
+        interpret = _default_interpret(interpret)
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_kmeans_assign, interpret=interpret))
+        return self._jitted[interpret](jnp.asarray(points, jnp.float32),
+                                       jnp.asarray(centroids, jnp.float32),
+                                       self.rowid)
+
+
+register(
+    "spmv",
+    costs=lambda indptr, indices, data: NnzCosts(indptr),
+    build=SpmvOp,
+    doc="Segmented CSR SpMV; inputs (indptr, indices, data); cost = row nnz.")
+register(
+    "bfs",
+    costs=lambda indptr, indices: DegreeCosts(indptr),
+    build=BfsOp,
+    doc="Pull-direction BFS; inputs (indptr, indices); cost = in-degree.")
+register(
+    "kmeans",
+    # float64 coercion keeps the provider on its quantizing path (ceil, >= 1
+    # unit per point) for integer inputs too — every point must be computed
+    costs=lambda costs: ExplicitCosts(np.asarray(costs, np.float64)),
+    build=KMeansOp,
+    doc="K-Means assignment; input (predicted per-point costs).")

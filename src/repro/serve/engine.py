@@ -21,13 +21,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import welford as W
+from ..sched.defaults import ICH_EPS
 from ..models import model as M
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_seq: int = 512
-    eps: float = 0.33          # iCh band
+    eps: float = ICH_EPS       # iCh band (unified default)
     init_divisor: float = 4.0  # d_0: first chunk = prompt_len / d_0
     min_chunk: int = 16
 

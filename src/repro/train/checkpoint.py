@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing.
 
-Design (1000+-node posture, DESIGN.md §5):
+Design (1000+-node posture, DESIGN.md §6):
 * the state pytree is saved as flat npz shards + a JSON manifest;
 * writes go to a temp dir and are published with an atomic rename, so a
   node failure mid-write never corrupts the latest checkpoint;

@@ -17,6 +17,7 @@ from ..models import model as M
 from ..models import moe as MOE
 from ..optim import adamw
 from ..optim import grad_compress as GC
+from ..sched.defaults import ICH_EPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,7 +25,7 @@ class TrainConfig:
     opt: adamw.AdamWConfig = adamw.AdamWConfig()
     microbatch: int = 0          # 0 = no accumulation
     grad_compress: bool = False  # int8 + error feedback on grads
-    ich_eps: float = 0.33        # MoE balancer epsilon (paper Table 2)
+    ich_eps: float = ICH_EPS     # MoE balancer epsilon (unified default)
     dtype: Any = jnp.bfloat16
     cast_params_once: bool = False  # bf16-cast the param tree BEFORE the
     # FSDP all-gathers (halves weight-gather wire + gathered traffic; §Perf)

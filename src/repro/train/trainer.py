@@ -1,6 +1,6 @@
 """Training loop: checkpoint/restart, failure injection, elastic re-shard.
 
-Fault-tolerance contract (DESIGN.md §5):
+Fault-tolerance contract (DESIGN.md §6):
 * auto-resume from the newest fully-published checkpoint;
 * `failure_at` injects a crash mid-run (tests restart end-to-end);
 * restarts may use a DIFFERENT mesh (elastic): checkpoints are logical,
