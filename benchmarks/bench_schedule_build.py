@@ -3,17 +3,23 @@
 Measures, across item counts (default 10k / 100k / 1M):
 
   * `build_schedule` wall time — vectorized array program vs the
-    `_reference_*` loop oracle (the seed implementation) — plus the same
-    comparison for `pack_csr`; outputs are asserted identical, so the
-    speedup numbers can't drift away from correctness;
+    `_reference_*` loop oracle (the seed implementation);
+  * `pack_csr` wall time PER LAYOUT: the flat (T, R, W) layout and the
+    worker-sharded (p*S, R, W) layout the 2D kernels consume (partition +
+    shard layout time reported separately). Outputs are asserted identical
+    to the loop oracle on BOTH layouts before any timing is reported, so
+    the speedup numbers can't drift away from correctness;
   * the `repro.sched` schedule cache: a repeated `LoopScheduler.schedule()`
     call with identical inputs must be an LRU hit that returns the
     previously built `Schedule` object and skips construction entirely
     (asserted on the cache counters and on object identity); warm-path
     cost is the fingerprint hash;
-  * interpret-mode step cost of the three ich_* Pallas kernels at the
-    smallest size (interpret mode is Python-per-grid-step, so larger sizes
-    measure the interpreter, not the kernel).
+  * interpret-mode step cost of the three ich_* kernels at the smallest
+    size (interpret mode is Python-per-grid-step, so larger sizes measure
+    the interpreter, not the kernel), on the sequential (T,) reference
+    grid AND the worker-sharded superstepped 2D grid at p in {1, 4} —
+    sharded outputs are asserted bit-identical to the sequential grid, so
+    this section doubles as the CI sharded-kernel smoke.
 
 Writes `BENCH_schedule.json` at the repo root so future PRs have a recorded
 trajectory to regress against, and prints one CSV line per measurement.
@@ -35,10 +41,12 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import tiling as T
+from repro.sched.defaults import SUPERSTEP
 
 ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_SIZES = (10_000, 100_000, 1_000_000)
 ROWS_PER_TILE = 8
+SHARD_P = 8  # worker count for the sharded-layout pack measurements
 
 
 def workload(n: int, seed: int = 1) -> np.ndarray:
@@ -69,8 +77,8 @@ def _csr(sizes: np.ndarray, seed: int = 2):
 
 
 def bench_build(n: int, repeats: int) -> dict:
-    """Vectorized vs reference construction at n items (outputs asserted
-    equal before any timing is reported)."""
+    """Vectorized vs reference construction at n items, plus pack_csr per
+    layout (outputs asserted equal before any timing is reported)."""
     sizes = workload(n)
     ref_repeats = repeats if n <= 100_000 else 1  # ref at 1M is seconds/run
     t_vec, sched = _best(lambda: T.build_schedule(
@@ -82,12 +90,39 @@ def bench_build(n: int, repeats: int) -> dict:
     np.testing.assert_array_equal(sched.seg_len, ref.seg_len)
 
     indptr, indices, data = _csr(sizes)
+    costs = 1.0 + sizes.astype(np.float64)
+    t_shard, shards = _best(lambda: T.shard_schedule(
+        sched, sched.tile_cost(costs, sizes), SHARD_P), repeats)
+
     t_pvec, packed = _best(
         lambda: T.pack_csr(indptr, indices, data, sched), repeats)
+    # the sharded layout is zero-copy (kernels fetch blocks straight from
+    # the flat payload): its pack = the superstep-padded flat pack plus
+    # the prefetch-stream build (block ids + sharded item ids)
+    B = shards.superstep
+
+    def pack_sharded():
+        vp, cp = T.pack_csr(indptr, indices, data, sched, pad_tiles_to=B)
+        return vp, cp, shards.kernel_block_ids(), shards.shard_item_id(sched)
+
+    t_psh, (pv, pc, blkid, rowid_sh) = _best(pack_sharded, repeats)
     t_pref, packed_ref = _best(
         lambda: T._reference_pack_csr(indptr, indices, data, sched), 1)
+    # vec == reference on the flat layout...
     np.testing.assert_array_equal(packed[0], packed_ref[0])
     np.testing.assert_array_equal(packed[1], packed_ref[1])
+    # ...and on the sharded layout: the padded payload matches reference on
+    # real tiles (zeros beyond), and the block/item prefetch streams name
+    # every tile exactly once
+    Tn = sched.n_tiles
+    np.testing.assert_array_equal(pv[:Tn], packed_ref[0])
+    np.testing.assert_array_equal(pc[:Tn], packed_ref[1])
+    assert (pv[Tn:] == 0).all() and (pc[Tn:] == 0).all()
+    perm = shards.perm
+    np.testing.assert_array_equal(np.sort(perm[perm >= 0]), np.arange(Tn))
+    assert blkid.shape == (SHARD_P * shards.n_steps,)
+    assert rowid_sh.shape == (SHARD_P * shards.tiles_per_worker,
+                              ROWS_PER_TILE)
     return {
         "n_items": n,
         "nnz": int(sizes.sum()),
@@ -96,9 +131,14 @@ def bench_build(n: int, repeats: int) -> dict:
         "build_vec_s": t_vec,
         "build_ref_s": t_ref,
         "build_speedup": t_ref / t_vec,
-        "pack_vec_s": t_pvec,
-        "pack_ref_s": t_pref,
-        "pack_speedup": t_pref / t_pvec,
+        "pack": {
+            "ref_s": t_pref,
+            "flat": {"vec_s": t_pvec, "speedup": t_pref / t_pvec},
+            "sharded": {"vec_s": t_psh, "speedup": t_pref / t_psh,
+                        "p": SHARD_P, "superstep": B,
+                        "partition_s": t_shard,
+                        "tiles_per_worker": shards.tiles_per_worker},
+        },
     }
 
 
@@ -133,49 +173,110 @@ def bench_cache(n: int, repeats: int) -> dict:
     }
 
 
-def bench_kernel_step(n: int) -> dict:
-    """Steady-state interpret-mode cost of one full schedule sweep for each
-    ich_* kernel (first call = trace/compile, second call timed). Ops are
-    built through the `repro.sched` registry (the facade path)."""
+def _timed(fn, repeats: int = 3):
     import jax
+    out = jax.block_until_ready(fn())  # trace + compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
 
+
+def bench_kernel_step(n: int, shard_ps=(1, 4)) -> dict:
+    """Steady-state interpret-mode cost of one full schedule sweep for each
+    ich_* kernel (first call = trace/compile, second call timed): the
+    sequential (T,) reference grid vs the worker-sharded superstepped 2D
+    grid at p in `shard_ps`. Sharded outputs are asserted bit-identical to
+    the sequential grid — this is the CI sharded-kernel smoke."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ich_bfs.ich_bfs import (ich_bfs_step,
+                                               ich_bfs_step_sharded)
+    from repro.kernels.ich_kmeans.ich_kmeans import (
+        ich_kmeans_assign, ich_kmeans_assign_sharded)
+    from repro.kernels.ich_spmv.ich_spmv import ich_spmv, ich_spmv_sharded
     from repro.sched import LoopScheduler
 
-    sched = LoopScheduler(rows_per_tile=ROWS_PER_TILE)
     rng = np.random.default_rng(3)
     sizes = workload(n)
     indptr, indices, data = _csr(sizes)
-    out = {"n_items": n}
+    scheduler = LoopScheduler(rows_per_tile=ROWS_PER_TILE)
+    s = scheduler.schedule(np.diff(indptr))
+    n_tiles, B = s.n_tiles, SUPERSTEP
+    out = {"n_items": n, "n_tiles": n_tiles, "superstep": B}
 
-    spmv = sched.build("spmv", indptr, indices, data)
-    x = rng.standard_normal(sizes.size).astype(np.float32)
-    jax.block_until_ready(spmv(x, interpret=True))  # trace + compile
-    t0 = time.perf_counter()
-    jax.block_until_ready(spmv(x, interpret=True))
-    dt = time.perf_counter() - t0
-    n_tiles = spmv.rowid.shape[0]
-    out["ich_spmv"] = {"total_s": dt, "n_tiles": int(n_tiles),
-                       "per_tile_us": 1e6 * dt / n_tiles}
+    def record(name, seq_fn, sharded_fn, k_tiles):
+        """Time the sequential grid, then each sharded p; assert bitwise
+        equality; return {seq: {...}, sharded: {p: {...}}}. `k_tiles` is
+        the tile count of the schedule THIS kernel runs (kmeans builds its
+        own schedule, which need not match spmv/bfs's)."""
+        dt, ref_out = _timed(seq_fn)
+        rec = {"seq": {"total_s": dt, "per_tile_us": 1e6 * dt / k_tiles}}
+        rec["sharded"] = {}
+        for p, fn in sharded_fn.items():
+            dt_p, out_p = _timed(fn)
+            np.testing.assert_array_equal(
+                np.asarray(out_p), np.asarray(ref_out),
+                err_msg=f"{name} sharded p={p} != sequential grid")
+            rec["sharded"][str(p)] = {
+                "total_s": dt_p, "per_tile_us": 1e6 * dt_p / k_tiles,
+                "per_tile_speedup": dt / dt_p}
+        return rec
 
-    bfs = sched.build("bfs", indptr, indices)
-    frontier = (rng.random(sizes.size) < 0.05).astype(np.float32)
-    visited = frontier.copy()
-    jax.block_until_ready(bfs.step(frontier, visited, interpret=True))
-    t0 = time.perf_counter()
-    jax.block_until_ready(bfs.step(frontier, visited, interpret=True))
-    dt = time.perf_counter() - t0
-    out["ich_bfs"] = {"total_s": dt, "n_tiles": bfs.schedule.n_tiles,
-                      "per_tile_us": 1e6 * dt / bfs.schedule.n_tiles}
+    # --- spmv ---------------------------------------------------------
+    x = jnp.asarray(rng.standard_normal(sizes.size).astype(np.float32))
+    vals, cols = T.pack_csr(indptr, indices, data, s.tiles)
+    va, ca, ra = jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(s.item_id)
+    vp, cp = T.pack_csr(indptr, indices, data, s.tiles, pad_tiles_to=B)
+    vpa, cpa = jnp.asarray(vp), jnp.asarray(cp)
+    seq = jax.jit(lambda: ich_spmv(va, ca, ra, x, sizes.size,
+                                   interpret=True))
+    sharded = {}
+    for p in shard_ps:
+        sh = s.shard(p=p)
+        args = (jnp.asarray(sh.shard_item_id(s.tiles)),
+                jnp.asarray(sh.kernel_block_ids()))
+        sharded[p] = jax.jit(lambda a=args, p=p: ich_spmv_sharded(
+            vpa, cpa, *a, x, sizes.size, p, B, interpret=True))
+    out["ich_spmv"] = record("ich_spmv", seq, sharded, s.n_tiles)
 
-    km = sched.build("kmeans", np.maximum(sizes.astype(np.float64), 1.0))
-    pts = rng.standard_normal((sizes.size, 8)).astype(np.float32)
-    cent = rng.standard_normal((16, 8)).astype(np.float32)
-    jax.block_until_ready(km(pts, cent, interpret=True))
-    t0 = time.perf_counter()
-    jax.block_until_ready(km(pts, cent, interpret=True))
-    dt = time.perf_counter() - t0
-    out["ich_kmeans"] = {"total_s": dt, "n_tiles": km.schedule.n_tiles,
-                         "per_tile_us": 1e6 * dt / km.schedule.n_tiles}
+    # --- bfs ----------------------------------------------------------
+    frontier = jnp.asarray((rng.random(sizes.size) < 0.05)
+                           .astype(np.float32))
+    ones = np.ones(len(indices), np.float32)
+    mask, mcols = T.pack_csr(indptr, indices, ones, s.tiles)
+    ma, mc = jnp.asarray(mask), jnp.asarray(mcols)
+    mp, mcp = T.pack_csr(indptr, indices, ones, s.tiles, pad_tiles_to=B)
+    mpa, mcpa = jnp.asarray(mp), jnp.asarray(mcp)
+    seq = jax.jit(lambda: ich_bfs_step(ma, mc, ra, frontier, frontier,
+                                       sizes.size, interpret=True))
+    sharded = {}
+    for p in shard_ps:
+        sh = s.shard(p=p)
+        args = (jnp.asarray(sh.shard_item_id(s.tiles)),
+                jnp.asarray(sh.kernel_block_ids()))
+        sharded[p] = jax.jit(lambda a=args, p=p: ich_bfs_step_sharded(
+            mpa, mcpa, *a, frontier, frontier, sizes.size, p, B,
+            interpret=True))
+    out["ich_bfs"] = record("ich_bfs", seq, sharded, s.n_tiles)
+
+    # --- kmeans -------------------------------------------------------
+    km_s = scheduler.schedule(np.maximum(sizes.astype(np.float64), 1.0))
+    pts = jnp.asarray(rng.standard_normal((sizes.size, 8))
+                      .astype(np.float32))
+    cent = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    kra = jnp.asarray(km_s.item_id)
+    seq = jax.jit(lambda: ich_kmeans_assign(pts, cent, kra, interpret=True))
+    sharded = {}
+    for p in shard_ps:
+        sh = km_s.shard(p=p)
+        rid = jnp.asarray(sh.shard_item_id(km_s.tiles))
+        sharded[p] = jax.jit(lambda r=rid, p=p: ich_kmeans_assign_sharded(
+            pts, cent, r, p, B, interpret=True))
+    out["ich_kmeans"] = record("ich_kmeans", seq, sharded, km_s.n_tiles)
     return out
 
 
@@ -195,14 +296,18 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
         "builds": [],
     }
     print("n_items,width,n_tiles,build_vec_s,build_ref_s,build_speedup,"
-          "pack_vec_s,pack_ref_s,pack_speedup")
+          "pack_ref_s,pack_flat_s,pack_flat_speedup,pack_sharded_s,"
+          "pack_sharded_speedup")
     for n in sizes:
         row = bench_build(n, repeats)
         report["builds"].append(row)
+        pk = row["pack"]
         print(f"{row['n_items']},{row['width']},{row['n_tiles']},"
               f"{row['build_vec_s']:.5f},{row['build_ref_s']:.5f},"
-              f"{row['build_speedup']:.1f},{row['pack_vec_s']:.5f},"
-              f"{row['pack_ref_s']:.5f},{row['pack_speedup']:.1f}")
+              f"{row['build_speedup']:.1f},{pk['ref_s']:.5f},"
+              f"{pk['flat']['vec_s']:.5f},{pk['flat']['speedup']:.1f},"
+              f"{pk['sharded']['vec_s']:.5f},"
+              f"{pk['sharded']['speedup']:.1f}")
     report["schedule_cache"] = []
     for n in sizes:
         row = bench_cache(n, repeats)
@@ -214,9 +319,12 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
         ks = bench_kernel_step(sizes[0])
         report["kernel_step_interpret"] = ks
         for k in ("ich_spmv", "ich_bfs", "ich_kmeans"):
-            print(f"kernel_step,{k},n={ks['n_items']},"
-                  f"total_s={ks[k]['total_s']:.3f},"
-                  f"per_tile_us={ks[k]['per_tile_us']:.1f}")
+            line = (f"kernel_step,{k},n={ks['n_items']},"
+                    f"seq_per_tile_us={ks[k]['seq']['per_tile_us']:.1f}")
+            for p, rec in ks[k]["sharded"].items():
+                line += (f",p{p}_per_tile_us={rec['per_tile_us']:.1f}"
+                         f",p{p}_speedup={rec['per_tile_speedup']:.1f}")
+            print(line)
     out_path = Path(out_path) if out_path else ROOT / "BENCH_schedule.json"
     out_path.write_text(json.dumps(report, indent=2) + "\n")
     print(f"# wrote {out_path}")

@@ -5,6 +5,7 @@ paper's workload generators.
 """
 from .policies import (
     Policy,
+    assigned,
     binlpt,
     dynamic,
     guided,
@@ -19,10 +20,14 @@ from .policies import (
 )
 from .tiling import (
     TileSchedule,
+    WorkerShards,
     build_schedule,
     coverage_counts,
     ich_tile_width,
+    make_shards,
     pack_csr,
+    partition_tiles,
+    shard_schedule,
     split_items,
 )
 from .simulator import (
@@ -52,11 +57,12 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
-    "Policy", "binlpt", "dynamic", "guided", "ich", "ich_chunk",
+    "Policy", "assigned", "binlpt", "dynamic", "guided", "ich", "ich_chunk",
     "ich_initial_d", "paper_policy_grid", "pretiled", "static", "stealing",
     "taskloop",
-    "TileSchedule", "build_schedule", "coverage_counts", "ich_tile_width",
-    "pack_csr", "split_items",
+    "TileSchedule", "WorkerShards", "build_schedule", "coverage_counts",
+    "ich_tile_width", "make_shards", "pack_csr", "partition_tiles",
+    "shard_schedule", "split_items",
     "segment_max", "segment_sum", "segmented_apply", "slot_window",
     "SimParams", "SimResult", "best_time_over_grid", "eps_sensitivity",
     "simulate", "speedup", "worst_stealing",

@@ -42,6 +42,8 @@ class Policy:
     num_tasks: Optional[int] = None  # taskloop: num_tasks = p
     binlpt_chunks: Optional[int] = None  # binlpt: max number of chunks
     explicit: Optional[tuple] = None  # pretiled: ((begin, end), ...)
+    # assigned: static per-chunk worker ids (parallel to `explicit`)
+    workers: Optional[tuple] = None
 
     def label(self) -> str:
         if self.name == "ich":
@@ -52,6 +54,8 @@ class Policy:
             return f"binlpt({self.binlpt_chunks})"
         if self.name == "pretiled":
             return f"pretiled({len(self.explicit or ())})"
+        if self.name == "assigned":
+            return f"assigned({len(self.explicit or ())})"
         return f"{self.name}({self.chunk})"
 
 
@@ -92,6 +96,25 @@ def pretiled(chunks) -> Policy:
     benchmarks/bench_ich_kernels.py)."""
     return Policy("pretiled", CENTRAL, law="pretiled",
                   explicit=tuple((int(b), int(e)) for b, e in chunks))
+
+
+def assigned(chunks, workers) -> Policy:
+    """Explicit chunk list with a STATIC per-chunk worker assignment: chunk
+    i runs on workers[i], chunks of one worker in list order — no queue, no
+    stealing. This is the simulator twin of the worker-sharded kernel
+    execution layer (`core.tiling.partition_tiles` + the 2D `ich_*`
+    grids): `Schedule.replay_sharded` replays a constructed schedule's
+    tile -> worker partition through it, and under zero overhead/jitter
+    the makespan equals the partition's max per-worker cost."""
+    chunks = tuple((int(b), int(e)) for b, e in chunks)
+    workers = tuple(int(w) for w in workers)
+    if len(workers) != len(chunks):
+        raise ValueError(f"{len(chunks)} chunks but {len(workers)} worker "
+                         "assignments")
+    if workers and min(workers) < 0:
+        raise ValueError(f"worker ids must be >= 0, got {min(workers)}")
+    return Policy("assigned", CENTRAL, law="pretiled", explicit=chunks,
+                  workers=workers)
 
 
 def stealing(chunk: int = 1) -> Policy:

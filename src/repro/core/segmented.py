@@ -30,6 +30,21 @@ whole scatter therefore lands inside one length-R window of the output:
 The window invariant only needs segments emitted in item order with >= 1
 segment per item — exactly what `build_schedule` guarantees for any sizes,
 width, or rows_per_tile.
+
+Two extensions serve the worker-sharded 2D kernels (DESIGN.md §2.6):
+`segmented_apply_batch` folds a whole superstep (B tiles) through B
+windowed RMWs in tile order (static unroll, so the fold order — and hence
+the floating-point result — matches the sequential grid exactly), accepting
+either a 1D output ref or a worker's (1, n) accumulator block; and
+`worker_reduce` is the host-side epilogue that folds the (p, n) per-worker
+accumulators into the final output with a pairwise tree. The tree order is
+free because the shard partition is item-closed
+(`core.tiling.partition_tiles`): every output row is accumulated by exactly
+one worker and all others hold an exact identity element (0 for add — a
+worker's accumulated row is never -0.0, since 0.0 + x only produces -0.0
+when x is -0.0, and the accumulate chain starts at +0.0 — 0 for max over
+nonnegative values, 0/-1 for store-as-max), so combining identities in any
+order is bit-exact.
 """
 from __future__ import annotations
 
@@ -77,12 +92,28 @@ def segment_max(values: jax.Array, onehot: jax.Array,
     return jnp.max(jnp.where(onehot, values[:, None], neutral), axis=0)
 
 
+def _window_read(out_ref, base, wn):
+    """Window slice of a 1D (n,) output ref or a (1, n) accumulator block."""
+    if len(out_ref.shape) == 2:
+        return out_ref[0, pl.ds(base, wn)]
+    return out_ref[pl.ds(base, wn)]
+
+
+def _window_write(out_ref, base, wn, upd) -> None:
+    if len(out_ref.shape) == 2:
+        out_ref[0, pl.ds(base, wn)] = upd
+    else:
+        out_ref[pl.ds(base, wn)] = upd
+
+
 def segmented_apply(out_ref, rows: jax.Array, values: jax.Array, *,
                     combine: str) -> None:
     """Fold a tile's (R,) slot values into `out_ref` through its schedule.
 
     One windowed read-modify-write replaces R scalar ones. Rows inside the
-    window that no slot covers are always left unchanged. `combine`:
+    window that no slot covers are always left unchanged. `out_ref` is the
+    (n,) output of a sequential-grid kernel or one worker's (1, n)
+    accumulator block of a sharded kernel. `combine`:
       * "add"   — out[r] += sum of the slots scheduled on row r (SpMV);
       * "max"   — out[r] = max(out[r], max of r's slots) (BFS);
       * "store" — out[r] = r's slot value where r is scheduled this tile
@@ -91,10 +122,10 @@ def segmented_apply(out_ref, rows: jax.Array, values: jax.Array, *,
     """
     if combine not in COMBINES:
         raise ValueError(f"combine must be one of {COMBINES}, got {combine!r}")
-    n_out = out_ref.shape[0]
+    n_out = out_ref.shape[-1]
     base, onehot = slot_window(rows, n_out)
     wn = onehot.shape[1]
-    cur = out_ref[pl.ds(base, wn)]
+    cur = _window_read(out_ref, base, wn)
     if combine == "add":
         upd = cur + segment_sum(values, onehot).astype(cur.dtype)
     else:
@@ -106,4 +137,40 @@ def segmented_apply(out_ref, rows: jax.Array, values: jax.Array, *,
             upd = jnp.where(covered, jnp.maximum(cur, val), cur)
         else:  # store
             upd = jnp.where(covered, val, cur)
-    out_ref[pl.ds(base, wn)] = upd
+    _window_write(out_ref, base, wn, upd)
+
+
+def segmented_apply_batch(out_ref, rows: jax.Array, values: jax.Array, *,
+                          combine: str) -> None:
+    """Fold one superstep — B tiles of (R,) slot values — into `out_ref`.
+
+    `rows`/`values` are (B, R); the B windowed RMWs unroll statically in
+    tile order, so a worker's fold order over its tiles is exactly the
+    sequential grid's (bit-identical accumulation), while the caller's
+    gather/compute amortizes over the whole (B*R, W) block.
+    """
+    B = rows.shape[0]
+    for b in range(B):
+        segmented_apply(out_ref, rows[b], values[b], combine=combine)
+
+
+def worker_reduce(acc: jax.Array, combine: str) -> jax.Array:
+    """Fold (p, n) per-worker accumulators into the final (n,) output.
+
+    Pairwise tree over the worker axis. Exact for any order because the
+    shard partition is item-closed: each row was accumulated by exactly one
+    worker and every other worker holds the combine's identity there ("add"
+    folds +0.0s, "max" folds 0s under nonnegative values, "store" is
+    lowered to max over init values; see module docstring).
+    """
+    if combine not in COMBINES:
+        raise ValueError(f"combine must be one of {COMBINES}, got {combine!r}")
+    op = jnp.add if combine == "add" else jnp.maximum
+    parts = [acc[i] for i in range(acc.shape[0])]
+    while len(parts) > 1:
+        folded = [op(parts[i], parts[i + 1])
+                  for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            folded.append(parts[-1])
+        parts = folded
+    return parts[0]

@@ -131,6 +131,32 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
         pretiled = P.pretile(policy, costs if estimate is None else estimate, p)
     grab_cost = params.task_overhead if policy.name == "taskloop" else params.dispatch_overhead
 
+    if policy.name == "assigned":
+        # Static per-chunk worker assignment (policies.assigned): worker w
+        # runs its chunks in list order, no queue and no stealing — the
+        # simulator twin of the worker-sharded kernel grids. Makespan is
+        # the max per-worker finish time; with zero dispatch overhead and
+        # jitter it reduces to the partition's max per-worker cost
+        # (Schedule.replay_sharded / tests/test_sharding.py).
+        if policy.workers and not (0 <= min(policy.workers)
+                                   and max(policy.workers) < p):
+            raise ValueError(f"assignment names workers outside [0, {p}): "
+                             f"[{min(policy.workers)}, "
+                             f"{max(policy.workers)}]")
+        tw = np.zeros(p)
+        for (b, e), w in zip(pretiled, policy.workers or ()):
+            work = csum[e] - csum[b]
+            tw[w] += grab_cost + work / speeds[w]
+            if assignment is not None:
+                assignment[b:e] = w
+            if res.chunk_log is not None:
+                res.chunk_log.append((b, e, w, work))
+            res.chunks += 1
+            res.busy += work / speeds[w]
+            res.overhead += grab_cost
+        res.makespan = float(tw.max()) if p else 0.0
+        return
+
     if policy.name == "binlpt":
         # BinLPT (paper ref. 9): equal-work chunks are STATICALLY assigned to
         # threads by LPT on the workload ESTIMATE; threads then run their own

@@ -16,12 +16,20 @@ cost per K-Means point), we
    `item_id` array is the scalar-prefetch schedule a kernel consumes.
 
 Every kernel under `repro/kernels/ich_*` builds its schedule here; `pack_csr`
-additionally gathers CSR payloads into the (T, R, W) layout. The schedule is
+additionally packs CSR payloads into the (T, R, W) layout (optionally padded
+to whole supersteps). The sharding layer (DESIGN.md §2.6) lowers the
+schedule's parallelism p onto the accelerator: `partition_tiles`
+LPT-assigns item-closed chains of superstep blocks to workers by tile cost
+and `make_shards`/`shard_schedule` lay the result out as the (p, S_B)
+block permutation whose blocks the 2D kernels fetch straight out of the
+flat payload — lowering moves no payload bytes. The schedule is
 cross-checkable against the discrete-event simulator: `slot_ranges()` maps
 tiles to contiguous chunks in flattened work-unit space, which can be handed
 to `simulate(..., policies.pretiled(ranges), record_chunks=True)` — the
 simulator's per-chunk work must equal `tile_cost` (see
-benchmarks/bench_ich_kernels.py and tests/test_tiling.py).
+benchmarks/bench_ich_kernels.py and tests/test_tiling.py) — and the worker
+partition replays the same way through `policies.assigned`
+(tests/test_sharding.py).
 
 Construction is fully vectorized (DESIGN.md §2.5): segment counts come from a
 ceil-div, segment/unit coordinates from `cumsum`/`repeat` de-flattening, and
@@ -34,12 +42,13 @@ formulations are kept as `_reference_*` oracles; tests assert equality.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.sched.defaults import ICH_EPS
+from repro.sched.defaults import ICH_EPS, SUPERSTEP
 
 # ---------------------------------------------------------------------------
 # Construction workspace: schedule construction is a per-request operation in
@@ -261,6 +270,199 @@ class TileSchedule:
         return np.repeat(unit, sizes)
 
 
+# ---------------------------------------------------------------------------
+# Worker sharding: lower the schedule's parallelism p onto the accelerator
+# (DESIGN.md §2.6). Tiles are partitioned across p workers by tile cost and
+# each worker's shard becomes one slice of a 2D kernel grid, so tiles run
+# concurrently across TPU cores instead of serially on one grid.
+# ---------------------------------------------------------------------------
+
+def tile_spans(item_id: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(first_item, last_item) per tile, -1 for all-padding tiles.
+
+    Greedy packing emits segments in item order, so within a tile the item
+    ids are nondecreasing with any -1 padding confined to the tail — the
+    first real item is slot 0 and the last is the row max.
+    """
+    first = item_id[:, 0].astype(np.int32)
+    last = item_id.max(axis=1).astype(np.int32)
+    return first, last
+
+
+def partition_tiles(tile_cost: np.ndarray, item_id: np.ndarray,
+                    p: int, block: int = 1) -> np.ndarray:
+    """Cost-balanced (LPT) tile -> worker map, shape (T,) int32.
+
+    Tiles are grouped at `block` granularity (`block` = the kernel
+    superstep B, so a worker's shard is a list of whole B-tile blocks the
+    2D kernels can fetch straight out of the FLAT payload — no payload
+    reorder). Blocks are further merged into *item-closed chains*: a chain
+    boundary is only allowed where no item has segments on both sides
+    (split items span contiguous tile runs, so the check is last-item !=
+    first-item across the cut). Chains are then assigned to workers by LPT
+    (heaviest chain to the least-loaded worker), which is BinLPT's
+    placement rule (PAPERS.md) applied to iCh-constructed tiles.
+
+    Keeping every item's tiles on ONE worker is what makes the sharded
+    kernels bit-identical to the sequential grid: each output row is
+    accumulated by exactly one worker, in ascending tile order (the same
+    fold order the single grid uses), and every other worker contributes an
+    exact identity element to the cross-worker reduction.
+    """
+    tile_cost = np.asarray(tile_cost, np.float64)
+    T = int(tile_cost.size)
+    p, blk = int(p), int(block)
+    if p < 1:
+        raise ValueError(f"worker count must be positive, got {p}")
+    if blk < 1:
+        raise ValueError(f"block must be positive, got {block}")
+    if T == 0:
+        return np.empty(0, np.int32)
+    if p == 1:
+        return np.zeros(T, np.int32)
+    first, last = tile_spans(item_id)
+    # cut between tiles t-1 and t is item-closed unless an item spans it
+    spans = (last[:-1] == first[1:]) & (first[1:] >= 0) & (last[:-1] >= 0)
+    n_blocks = -(-T // blk)
+    if blk == 1:
+        merge = spans
+    else:
+        # block boundaries sit at tiles blk, 2*blk, ...: blocks b-1 and b
+        # merge when the tile-level cut there is not item-closed
+        merge = spans[blk - 1:T - 1:blk]
+    chain = np.concatenate([[0], np.cumsum(~merge)]).astype(np.int64)
+    n_chains = int(chain[-1]) + 1
+    bcost = tile_cost
+    if blk > 1:
+        bcost = np.bincount(np.arange(T) // blk, weights=tile_cost,
+                            minlength=n_blocks)
+    ccost = np.bincount(chain, weights=bcost, minlength=n_chains)
+    order = np.argsort(-ccost, kind="stable")
+    heap = [(0.0, w) for w in range(p)]
+    chain_worker = np.empty(n_chains, np.int32)
+    for c in order:
+        load, w = heapq.heappop(heap)
+        chain_worker[c] = w
+        heapq.heappush(heap, (load + float(ccost[c]), w))
+    block_worker = chain_worker[chain]
+    return np.repeat(block_worker, blk)[:T]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerShards:
+    """A tile -> worker partition lowered to a padded (p, S_B) BLOCK layout.
+
+    `worker[t]` is tile t's worker (constant within each superstep block);
+    `block_perm[w, s]` is the B-tile block worker w executes at grid step
+    s (-1 = padding step), each worker's blocks in ascending order — block
+    b covers tiles [b*B, (b+1)*B). Because blocks are contiguous runs of
+    the FLAT tile sequence, the 2D kernels fetch them directly from the
+    flat (T_pad, R, W) payload via a prefetched data-dependent block index
+    (`kernel_block_ids`) — lowering to the shard layout moves NO payload
+    bytes. `perm` is the tile-granular expansion (p, S_B*B) used for the
+    prefetched item-id schedule and for tests.
+    """
+
+    worker: np.ndarray      # (T,) int32 tile -> worker
+    block_perm: np.ndarray  # (p, S_B) int32 block index, -1 = padding
+    superstep: int          # tiles per block / kernel grid step (B)
+
+    @property
+    def p(self) -> int:
+        return int(self.block_perm.shape[0])
+
+    @property
+    def n_steps(self) -> int:
+        """S_B: kernel grid steps per worker (blocks, incl. padding)."""
+        return int(self.block_perm.shape[1])
+
+    @property
+    def tiles_per_worker(self) -> int:
+        """S = S_B * B: tile slots per worker's shard (incl. padding)."""
+        return self.n_steps * self.superstep
+
+    @property
+    def n_tiles_padded(self) -> int:
+        """Flat tile count rounded up to whole blocks — the first axis the
+        kernels' payload must have (`pack_csr(..., pad_tiles_to=B)`)."""
+        T = int(self.worker.size)
+        return -(-T // self.superstep) * self.superstep
+
+    @property
+    def perm(self) -> np.ndarray:
+        """Tile-granular shard layout (p, S): tile at worker w's slot s,
+        -1 padding (block_perm expanded; the last real block's tail past T
+        is padding)."""
+        B = self.superstep
+        T = int(self.worker.size)
+        tiles = (self.block_perm[:, :, None] * B
+                 + np.arange(B, dtype=np.int32)[None, None, :])
+        tiles = np.where((self.block_perm[:, :, None] >= 0) & (tiles < T),
+                         tiles, -1)
+        return tiles.reshape(self.p, -1).astype(np.int32)
+
+    def kernel_block_ids(self) -> np.ndarray:
+        """(p*S_B,) int32 block-index prefetch stream for the kernels'
+        data-dependent BlockSpec index maps, padding steps clamped to
+        block 0 (their prefetched item ids are -1, so the fetched payload
+        is never applied)."""
+        return np.maximum(self.block_perm, 0).reshape(-1)
+
+    def worker_cost(self, tile_cost: np.ndarray) -> np.ndarray:
+        """Per-worker assigned cost, shape (p,) — the quantity the
+        simulator's static-assignment replay must reproduce
+        (`Schedule.replay_sharded`)."""
+        return np.bincount(self.worker,
+                           weights=np.asarray(tile_cost, np.float64),
+                           minlength=self.p)
+
+    def shard_item_id(self, schedule: TileSchedule) -> np.ndarray:
+        """The (p*S, R) scalar-prefetch schedule for the sharded kernels:
+        tile perm[w, s]'s item ids at row w*S + s, -1 rows on padding."""
+        flat = self.perm.reshape(-1)
+        out = np.where((flat >= 0)[:, None],
+                       schedule.item_id[np.clip(flat, 0, None)],
+                       np.int32(-1))
+        return np.ascontiguousarray(out, np.int32)
+
+
+def make_shards(worker: np.ndarray, p: int,
+                superstep: int = SUPERSTEP) -> WorkerShards:
+    """Lay a (block-aligned) tile -> worker map out as the shard layout."""
+    worker = np.asarray(worker, np.int32)
+    p, B = int(p), int(superstep)
+    if B < 1:
+        raise ValueError(f"superstep must be positive, got {superstep}")
+    if worker.size and not (0 <= int(worker.min())
+                            and int(worker.max()) < p):
+        raise ValueError(f"worker ids must lie in [0, {p}), got "
+                         f"[{int(worker.min())}, {int(worker.max())}]")
+    T = worker.size
+    n_blocks = -(-T // B)
+    block_worker = worker[::B]
+    if not np.array_equal(np.repeat(block_worker, B)[:T], worker):
+        raise ValueError("worker map is not constant within superstep "
+                         f"blocks of {B} tiles; partition with "
+                         f"partition_tiles(..., block={B})")
+    counts = np.bincount(block_worker, minlength=p)
+    S_B = max(int(counts.max(initial=0)), 1)
+    block_perm = np.full((p, S_B), -1, np.int32)
+    order = np.argsort(block_worker, kind="stable")  # ascending per worker
+    w_sorted = block_worker[order]
+    pos = np.arange(order.size) - np.searchsorted(w_sorted, w_sorted)
+    block_perm[w_sorted, pos] = order.astype(np.int32)
+    return WorkerShards(worker=worker, block_perm=block_perm, superstep=B)
+
+
+def shard_schedule(schedule: TileSchedule, tile_cost: np.ndarray, p: int,
+                   superstep: int = SUPERSTEP) -> WorkerShards:
+    """Partition tiles by cost (at superstep-block granularity) and lower
+    to the zero-copy shard layout."""
+    worker = partition_tiles(tile_cost, schedule.item_id, p,
+                             block=superstep)
+    return make_shards(worker, p, superstep)
+
+
 def _check_width(width: int | None) -> int | None:
     if width is not None and int(width) <= 0:
         raise ValueError(f"explicit tile width must be positive, got {width}")
@@ -326,65 +528,87 @@ def _unit_coords(schedule: TileSchedule) -> tuple[np.ndarray, np.ndarray]:
 
 
 def pack_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
-             schedule: TileSchedule) -> tuple[np.ndarray, np.ndarray]:
+             schedule: TileSchedule, *,
+             pad_tiles_to: int = 1) -> tuple[np.ndarray, np.ndarray]:
     """Gather CSR payloads into the schedule's (T, R, W) layout.
 
     Returns (vals, cols); padding slots/tails are zero, so sum-reductions
     over W need no masking (and vals doubles as a validity mask when the
-    payload is all-ones, as in BFS).
+    payload is all-ones, as in BFS). `pad_tiles_to` rounds the tile axis
+    up to a multiple (all-zero pad tiles) — the worker-sharded kernels
+    fetch whole supersteps of B tiles straight out of this FLAT array
+    (`WorkerShards.kernel_block_ids`), so they need T padded to B; the
+    pad tiles cost nothing beyond their zero pages.
 
-    Vectorized: every scheduled work unit's CSR source index is
-    indptr[item] + seg_start + pos and its destination is slot*W + pos, so
-    the whole packing is one gather + one (sorted-index) scatter per payload
-    array, with the vals and cols chains overlapped on the helper thread.
-    Index arithmetic runs in int32 through the construction workspace when
-    nnz and T*R*W fit (the int64 general case takes the same path, just
-    wider). `_reference_pack_csr` is the loop oracle.
+    Fast path (canonical CSR, schedule built from its row lengths): slots
+    in flat tile order name the work units in exactly CSR order (items
+    ascending, seg_start ascending within an item, coverage exactly once),
+    so the whole packing is a ragged-to-padded reshape of the SEQUENTIAL
+    payload stream — `out[lane < seg_len] = payload` — with no index
+    streams at all. Inputs that break the sequential-stream precondition
+    (indptr not starting at 0, schedule total != nnz) fall back to a
+    rectangular per-slot gather (indptr[item] + seg_start + [0, W) per
+    slot, masked past seg_len). Either way the two payload chains (vals,
+    cols) overlap on the helper thread and index/mask scratch is reused
+    across calls through the construction workspace.
+    `_reference_pack_csr` is the loop oracle.
     """
     indices = np.asarray(indices)
     data = np.asarray(data)
-    T, R, W = schedule.n_tiles, schedule.rows_per_tile, schedule.width
-    n_slots = T * R
-    trw = n_slots * W
-    vals = np.zeros(trw, data.dtype)
-    cols = np.zeros(trw, np.int32)
+    R, W = schedule.rows_per_tile, schedule.width
+    T = schedule.n_tiles
+    if int(pad_tiles_to) < 1:
+        raise ValueError(f"pad_tiles_to must be positive, got {pad_tiles_to}")
+    T_pad = -(-T // int(pad_tiles_to)) * int(pad_tiles_to)
+    length = schedule.seg_len.reshape(-1)
+    if data.size == 0:  # no payload at all: every slot is padding
+        return (np.zeros((T_pad, R, W), data.dtype),
+                np.zeros((T_pad, R, W), np.int32))
+    if indices.dtype != np.int32:
+        indices = indices.astype(np.int32)
     with _WS_LOCK:
-        len_f = schedule.seg_len.reshape(-1)
-        cum = _ws("pk_cum", n_slots, np.int64)
-        np.cumsum(len_f, out=cum)
-        total = int(cum[-1])
-        dt = np.int32 if max(trw, int(indptr[-1])) < 2 ** 31 else np.int64
-        # per-slot CSR base: indptr[item] + seg_start (padding slots have
-        # len 0 and contribute no units, so their wrapped base is never read)
-        base = _ws("pk_base", n_slots, dt)
-        np.take(np.asarray(indptr).astype(dt, copy=False),
-                schedule.item_id.reshape(-1), out=base, mode="wrap")
-        base += schedule.seg_start.reshape(-1)
-        first = _ws("pk_first", n_slots, dt)
-        np.subtract(cum, len_f, out=first, casting="unsafe")
-        # slot/unit iotas in dt: int32 arange would wrap past 2**31 units,
-        # which is exactly when the wide path is selected
-        slot = np.repeat(_ws_iota(n_slots, dt), len_f)
-        # pos = unit rank within its segment; src = CSR source per unit
-        pos = _ws("pk_pos", total, dt)
-        np.take(first, slot, out=pos, mode="clip")
-        np.subtract(_ws_iota(total, dt), pos, out=pos)
-        src = _ws("pk_src", total, dt)
-        np.take(base, slot, out=src, mode="clip")
-        src += pos
-        dst = _ws("pk_dst", total, dt)
-        np.multiply(slot, dt(W), out=dst)  # dst = slot*W + pos, all in dt
-        dst += pos
-        # vals chain on the helper thread, cols chain here
-        def _scatter(dst_flat, payload, srcidx, out):
-            out[dst_flat] = np.take(payload, srcidx)
+        sequential = (int(indptr[0]) == 0
+                      and int(length.sum(dtype=np.int64)) == data.size)
+        lane = _ws_iota(W)
+        if sequential:
+            # mask[k, l] = lane l of slot k is a real unit; True positions
+            # in C-order are exactly the CSR payload stream, in order
+            # (pad tiles' rows stay all-False -> calloc zeros untouched)
+            mask = _ws("pk_mask", T * R * W, np.bool_).reshape(T * R, W)
+            np.less(lane[None, :], length[:, None], out=mask)
 
-        fut = (_POOL.submit(_scatter, dst, data, src, vals)
-               if total >= 65_536 else _scatter(dst, data, src, vals))
-        cols[dst] = np.take(indices, src)
+            def _chain(payload):
+                out = np.zeros((T_pad * R, W), payload.dtype)  # calloc
+                out[:T * R][mask] = payload
+                return out
+        else:
+            n_slots = T * R
+            dt = (np.int32 if max(n_slots * W, int(indptr[-1]) + W) < 2 ** 31
+                  else np.int64)
+            # per-slot CSR base: indptr[item] + seg_start (padding slots
+            # have len 0, so their wrapped base is never kept)
+            base = _ws("pk_base", n_slots, dt)
+            np.take(np.asarray(indptr).astype(dt, copy=False),
+                    schedule.item_id.reshape(-1), out=base, mode="wrap")
+            base += schedule.seg_start.reshape(-1)
+            src = _ws("pk_src", n_slots * W, dt).reshape(n_slots, W)
+            np.add(base[:, None], _ws_iota(W, dt)[None, :], out=src)
+            pad = _ws("pk_pad", n_slots * W, np.bool_).reshape(n_slots, W)
+            np.greater_equal(lane[None, :], length[:, None], out=pad)
+
+            def _chain(payload):
+                out = np.zeros((T_pad * R, W), payload.dtype)
+                np.take(payload, src, out=out[:n_slots], mode="clip")
+                np.copyto(out[:n_slots], 0, where=pad)
+                return out
+
+        fut = (_POOL.submit(_chain, data)
+               if T_pad * R * W >= 65_536 else None)
+        vals = _chain(data) if fut is None else None
+        cols = _chain(indices)
         if fut is not None:
-            fut.result()
-    return vals.reshape(T, R, W), cols.reshape(T, R, W)
+            vals = fut.result()
+    return (vals.reshape(T_pad, R, W), cols.reshape(T_pad, R, W))
 
 
 def _reference_pack_csr(indptr: np.ndarray, indices: np.ndarray,

@@ -11,12 +11,26 @@ split across W-wide segments, segments greedily packed into (T, R) slots.
 `mask` is the all-ones CSR payload from `pack_csr` — 1.0 on real edge slots,
 0.0 on padding — so a padded slot can never observe frontier[cols==0].
 
-Kernel per level: persistent grid (T,); each step gathers frontier[cols]
-(R, W), reduces with max over W, and max-accumulates into the per-vertex
-output (split rows OR together across tiles), masked by `visited`. The
-max-accumulation routes through the shared segmented-reduction layer
+Two kernel realizations share the body (see ich_spmv for the pattern):
+
+* `ich_bfs_step` — sequential reference grid (T,): each step gathers
+  frontier[cols] (R, W), reduces with max over W, and max-accumulates into
+  the per-vertex output (split rows OR together across tiles), masked by
+  `visited`; grid steps run in order on one core, so the RMW is safe.
+* `ich_bfs_step_sharded` — worker-sharded 2D grid (p, S_B) (DESIGN.md
+  §2.6): tiles are cost-partitioned across p workers at superstep-block
+  granularity (item-closed — no vertex spans workers), each grid step
+  fetches a superstep of B tiles as one aligned (B, R, W) block straight
+  from the FLAT payload via a prefetched data-dependent block index
+  (no payload reorder), every worker max-accumulates into its own row of
+  a (p, n) block, and a pairwise tree max (`core.segmented.worker_reduce`)
+  folds the accumulators — bit-identical to the sequential grid: each
+  vertex is owned by one worker and all others contribute exact zeros
+  (the max identity for the 0/1 frontier indicators).
+
+The max-accumulation routes through the shared segmented-reduction layer
 (`core/segmented.py`): one windowed read-modify-write per tile instead of R
-scalar ones. Grid steps run sequentially on a TPU core, so the RMW is safe.
+scalar ones.
 """
 from __future__ import annotations
 
@@ -27,7 +41,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.segmented import segmented_apply
+from repro.core.segmented import (segmented_apply, segmented_apply_batch,
+                                  worker_reduce)
 
 
 def _bfs_kernel(rowid_ref, mask_ref, cols_ref, frontier_ref, visited_ref,
@@ -52,8 +67,9 @@ def _bfs_kernel(rowid_ref, mask_ref, cols_ref, frontier_ref, visited_ref,
 
 def ich_bfs_step(mask, cols, rowid, frontier, visited, n_vertices: int,
                  *, interpret: bool = False):
-    """One frontier expansion. mask/cols (T,R,W); rowid (T,R); frontier and
-    visited (n,) float32 indicators. Returns the next frontier (n,)."""
+    """One frontier expansion on the sequential reference grid. mask/cols
+    (T,R,W); rowid (T,R); frontier and visited (n,) float32 indicators.
+    Returns the next frontier (n,)."""
     T, R, W = mask.shape
     kernel = functools.partial(_bfs_kernel, n_vertices=n_vertices)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -73,3 +89,68 @@ def ich_bfs_step(mask, cols, rowid, frontier, visited, n_vertices: int,
         out_shape=jax.ShapeDtypeStruct((n_vertices,), frontier.dtype),
         interpret=interpret,
     )(rowid, mask, cols, frontier, visited)
+
+
+def _bfs_kernel_sharded(rowid_ref, blkid_ref, mask_ref, cols_ref,
+                        frontier_ref, visited_ref, out_ref, *,
+                        n_vertices: int, S: int, B: int):
+    w, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mask = mask_ref[...]  # (B, R, W): one superstep of this worker's shard
+    cols = cols_ref[...]
+    frontier = frontier_ref[...]
+    visited = visited_ref[...]
+    hit = jnp.max(mask * frontier[cols], axis=2)  # (B, R)
+    rows = rowid_ref[pl.ds(w * S + j * B, B)]  # (B, R) SMEM scalars
+    inc = hit * (1.0 - visited[jnp.clip(rows, 0, n_vertices - 1)])
+    segmented_apply_batch(out_ref, rows, inc, combine="max")
+
+
+def ich_bfs_step_sharded(mask, cols, rowid, blkid, frontier, visited,
+                         n_vertices: int, p: int, superstep: int,
+                         *, interpret: bool = False):
+    """One frontier expansion on the worker-sharded 2D grid. mask/cols
+    (T_pad, R, W): the FLAT packed payload with T padded to whole
+    supersteps; rowid (p*S, R) and blkid (p*S_B,) from
+    `core.tiling.WorkerShards`; frontier/visited (n,) float32 indicators.
+    Returns the next frontier (n,)."""
+    T_pad, R, W = mask.shape
+    p, B = int(p), int(superstep)
+    n_steps = int(blkid.shape[0]) // p
+    S = n_steps * B
+    if blkid.shape[0] != p * n_steps or rowid.shape[0] != p * S or T_pad % B:
+        raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
+                         f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
+    kernel = functools.partial(_bfs_kernel_sharded, n_vertices=n_vertices,
+                               S=S, B=B)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # sharded rowid + block ids to SMEM
+        grid=(p, n_steps),
+        in_specs=[
+            pl.BlockSpec((B, R, W),
+                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                                   0, 0)),
+            pl.BlockSpec((B, R, W),
+                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                                   0, 0)),
+            pl.BlockSpec(frontier.shape, lambda w, j, rowid, blk: (0,)),
+            pl.BlockSpec(visited.shape, lambda w, j, rowid, blk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_vertices),
+                               lambda w, j, rowid, blk: (w, 0)),
+    )
+    acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, n_vertices), frontier.dtype),
+        # workers are independent (item-closed partition): the shard
+        # dimension may run concurrently across TPU cores / megacore
+        compiler_params=None if interpret else pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rowid, blkid, mask, cols, frontier, visited)
+    return worker_reduce(acc, "max")

@@ -11,12 +11,22 @@ scheduled point is recomputed once per slot; the assignment write is
 idempotent (same argmin), so correctness is unaffected — redundant compute
 is the price a static grid pays where the runtime would have stolen.
 
-Kernel: persistent grid (T,); each step gathers its R scheduled points from
-the (n, D) point table in VMEM, computes squared distances to the (K, D)
-centroids, and writes per-point argmin through the prefetched item-id
-schedule via the shared segmented-reduction layer (`core/segmented.py`,
-"store" mode): one windowed read-modify-write per tile, with uncovered
-window rows keeping their previously written assignment.
+Two kernel realizations share the body (see ich_spmv for the pattern):
+
+* `ich_kmeans_assign` — sequential reference grid (T,): each step gathers
+  its R scheduled points from the (n, D) point table in VMEM, computes
+  squared distances to the (K, D) centroids, and writes per-point argmin
+  through the prefetched item-id schedule ("store" mode: uncovered window
+  rows keep their previously written assignment).
+* `ich_kmeans_assign_sharded` — worker-sharded 2D grid (p, S/B)
+  (DESIGN.md §2.6): tiles are cost-partitioned across p workers
+  (item-closed — no point spans workers), each grid step computes a
+  superstep of B tiles ((B*R, D) point gather), every worker stores into
+  its own row of a (p, n) block, and a pairwise tree max
+  (`core.segmented.worker_reduce`) folds the accumulators — bit-identical
+  to the sequential grid: assignments are >= 0, each point is stored by
+  exactly one worker, and every other worker holds the zero-initialized
+  identity.
 """
 from __future__ import annotations
 
@@ -27,7 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.segmented import segmented_apply
+from repro.core.segmented import (segmented_apply, segmented_apply_batch,
+                                  worker_reduce)
 
 
 def _kmeans_kernel(rowid_ref, pts_ref, cent_ref, out_ref, *, n_points: int):
@@ -49,8 +60,8 @@ def _kmeans_kernel(rowid_ref, pts_ref, cent_ref, out_ref, *, n_points: int):
 
 
 def ich_kmeans_assign(points, centroids, rowid, *, interpret: bool = False):
-    """points (n, D); centroids (K, D); rowid (T, R) schedule.
-    Returns assignments (n,) int32."""
+    """Sequential reference grid. points (n, D); centroids (K, D);
+    rowid (T, R) schedule. Returns assignments (n,) int32."""
     n = points.shape[0]
     T, R = rowid.shape
     kernel = functools.partial(_kmeans_kernel, n_points=n)
@@ -69,3 +80,56 @@ def ich_kmeans_assign(points, centroids, rowid, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(rowid, points, centroids)
+
+
+def _kmeans_kernel_sharded(rowid_ref, pts_ref, cent_ref, out_ref, *,
+                           n_points: int, S: int, B: int):
+    w, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pts = pts_ref[...]    # (n, D)
+    cent = cent_ref[...]  # (K, D)
+    ids = rowid_ref[pl.ds(w * S + j * B, B)]  # (B, R) SMEM scalars
+    flat = ids.reshape(-1)  # (B*R,)
+    sel = pts[jnp.clip(flat, 0, n_points - 1)]  # (B*R, D)
+    d2 = jnp.sum((sel[:, None, :] - cent[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32).reshape(ids.shape)
+    segmented_apply_batch(out_ref, ids, assign, combine="store")
+
+
+def ich_kmeans_assign_sharded(points, centroids, rowid, p: int,
+                              superstep: int, *, interpret: bool = False):
+    """Worker-sharded 2D grid. points (n, D); centroids (K, D); rowid
+    (p*S, R) in the shard layout of `core.tiling.WorkerShards`. Returns
+    assignments (n,) int32."""
+    n = points.shape[0]
+    PS, R = rowid.shape
+    p, B = int(p), int(superstep)
+    S = PS // p
+    if PS != p * S or S % B:
+        raise ValueError(f"shard layout mismatch: {PS} rows, p={p}, B={B}")
+    kernel = functools.partial(_kmeans_kernel_sharded, n_points=n, S=S, B=B)
+    n_steps = S // B
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # sharded rowid prefetched to SMEM
+        grid=(p, n_steps),
+        in_specs=[
+            pl.BlockSpec(points.shape, lambda w, j, rowid: (0, 0)),
+            pl.BlockSpec(centroids.shape, lambda w, j, rowid: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda w, j, rowid: (w, 0)),
+    )
+    acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.int32),
+        # workers are independent (item-closed partition): the shard
+        # dimension may run concurrently across TPU cores / megacore
+        compiler_params=None if interpret else pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rowid, points, centroids)
+    return worker_reduce(acc, "store")

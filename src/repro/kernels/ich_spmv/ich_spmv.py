@@ -8,16 +8,35 @@ chosen by the paper's band classification over the row-nnz distribution
 tiles — the work-stealing analogue: no tile (chunk) can be overloaded, heavy
 rows' overflow migrates to later tiles exactly like stolen iterations.
 
-The kernel is a persistent-grid pallas_call: grid = (n_tiles,); each step
-loads its (R, W) value/column tile from HBM into VMEM, gathers x, reduces
-over W, and ACCUMULATES into the output rows (grid steps execute
-sequentially on a TPU core, so read-modify-write of the output is safe).
-x is kept whole in VMEM (fits for n <= ~1M fp32). The per-tile accumulation
-routes through the shared segmented-reduction layer (`core/segmented.py`):
-a one-hot matmul folds the R partial sums into one length-R output window
-instead of R scalar read-modify-writes.
+Two kernel realizations share the body:
+
+* `ich_spmv` — the sequential reference grid: grid = (T,), one tile per
+  step, read-modify-write accumulation into the single output vector (grid
+  steps execute in order on one TPU core, so the RMW is safe).
+* `ich_spmv_sharded` — the production 2D grid (DESIGN.md §2.6): the
+  schedule's parallelism p is lowered onto the accelerator as a
+  worker-major grid (p, S_B). Tiles are cost-partitioned across p workers
+  at superstep-block granularity (`core.tiling.partition_tiles`,
+  item-closed so no row spans workers) and each grid step processes a
+  SUPERSTEP of B tiles — fetched as one aligned (B, R, W) block straight
+  out of the FLAT payload via a prefetched data-dependent block index
+  (`WorkerShards.kernel_block_ids`; lowering moves no payload bytes) —
+  with B in-order windowed RMWs, amortizing per-step dispatch/prefetch
+  overhead. Every worker accumulates into its own row of a (p, n_rows)
+  output block (no cross-worker races; the worker dimension is declared
+  "parallel" so Mosaic may split it across TPU cores), and a host-side
+  pairwise tree reduce (`core.segmented.worker_reduce`) folds the
+  accumulators — bit-identical to the sequential grid because each row is
+  owned by exactly one worker and all others contribute exact zeros.
+
+x is kept whole in VMEM (fits for n <= ~1M fp32). The per-tile
+accumulation routes through the shared segmented-reduction layer
+(`core/segmented.py`): a one-hot matmul folds the R partial sums into one
+length-R output window instead of R scalar read-modify-writes.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -26,11 +45,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.segmented import segmented_apply
+from repro.core.segmented import (segmented_apply, segmented_apply_batch,
+                                  worker_reduce)
 from repro.core.tiling import build_schedule, ich_tile_width, pack_csr
 from repro.sched.defaults import ICH_EPS
 
-__all__ = ["ich_tile_width", "pack_tiles", "ich_spmv"]
+__all__ = ["ich_tile_width", "pack_tiles", "ich_spmv", "ich_spmv_sharded"]
 
 
 def pack_tiles(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
@@ -68,7 +88,8 @@ def _spmv_kernel(rowid_ref, vals_ref, cols_ref, x_ref, out_ref):
 
 
 def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
-    """vals/cols (T,R,W); rowid (T,R); x (n,). Returns y (n_rows,)."""
+    """Sequential reference grid. vals/cols (T,R,W); rowid (T,R); x (n,).
+    Returns y (n_rows,)."""
     T, R, W = vals.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # rowid prefetched to SMEM (the schedule)
@@ -86,3 +107,65 @@ def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((n_rows,), x.dtype),
         interpret=interpret,
     )(rowid, vals, cols, x)
+
+
+def _spmv_kernel_sharded(rowid_ref, blkid_ref, vals_ref, cols_ref, x_ref,
+                         out_ref, *, S: int, B: int):
+    w, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...]  # (B, R, W): one superstep of this worker's shard
+    cols = cols_ref[...]
+    x = x_ref[...]  # (n,)
+    partial = jnp.sum(vals * x[cols], axis=2)  # (B, R)
+    rows = rowid_ref[pl.ds(w * S + j * B, B)]  # (B, R) SMEM scalars
+    # B in-order windowed RMWs into THIS worker's accumulator row — the
+    # same fold order the sequential grid uses for these tiles
+    segmented_apply_batch(out_ref, rows, partial, combine="add")
+
+
+def ich_spmv_sharded(vals, cols, rowid, blkid, x, n_rows: int, p: int,
+                     superstep: int, *, interpret: bool = False):
+    """Worker-sharded 2D grid. vals/cols (T_pad, R, W): the FLAT packed
+    payload with T padded to whole supersteps (`pack_csr(...,
+    pad_tiles_to=B)`); rowid (p*S, R) and blkid (p*S_B,) from
+    `core.tiling.WorkerShards` (`shard_item_id` / `kernel_block_ids`);
+    x (n,). Returns y (n_rows,)."""
+    T_pad, R, W = vals.shape
+    p, B = int(p), int(superstep)
+    n_steps = int(blkid.shape[0]) // p
+    S = n_steps * B
+    if blkid.shape[0] != p * n_steps or rowid.shape[0] != p * S or T_pad % B:
+        raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
+                         f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
+    kernel = functools.partial(_spmv_kernel_sharded, S=S, B=B)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # sharded rowid + block ids to SMEM
+        grid=(p, n_steps),
+        in_specs=[
+            # data-dependent superstep fetch: worker w's j-th block of B
+            # tiles, read straight from the flat payload
+            pl.BlockSpec((B, R, W),
+                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                                   0, 0)),
+            pl.BlockSpec((B, R, W),
+                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                                   0, 0)),
+            pl.BlockSpec(x.shape, lambda w, j, rowid, blk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_rows), lambda w, j, rowid, blk: (w, 0)),
+    )
+    acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, n_rows), x.dtype),
+        # workers are independent (item-closed partition): the shard
+        # dimension may run concurrently across TPU cores / megacore
+        compiler_params=None if interpret else pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rowid, blkid, vals, cols, x)
+    return worker_reduce(acc, "add")

@@ -155,6 +155,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
             "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
         }
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jaxlib: one dict per device
+            cost = cost[0] if cost else {}
         rec["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float)) and k in
                        ("flops", "bytes accessed", "transcendentals",

@@ -24,7 +24,8 @@ Exports are lazy (PEP 562) for two reasons: `repro.core` imports
 eagerly import core back; and the numpy-only surface (facade, simulator,
 executor) must stay importable without paying for jax.
 """
-from .defaults import ICH_EPS, MAX_WIDTH, MIN_WIDTH, ROWS_PER_TILE
+from .defaults import (ICH_EPS, MAX_WIDTH, MIN_WIDTH, ROWS_PER_TILE,
+                       SUPERSTEP)
 
 _LAZY = {
     # facade + schedule object (sched/api.py)
@@ -50,6 +51,7 @@ _LAZY = {
     # policy family + simulator knobs, re-exported so facade users need only
     # this package (the objects live in repro.core and stay usable from there)
     "Policy": "_core",
+    "assigned": "_core",
     "binlpt": "_core",
     "dynamic": "_core",
     "guided": "_core",
@@ -62,9 +64,10 @@ _LAZY = {
     "SimParams": "_core",
     "SimResult": "_core",
     "TileSchedule": "_core",
+    "WorkerShards": "_core",
 }
 
-__all__ = ["ICH_EPS", "MAX_WIDTH", "MIN_WIDTH", "ROWS_PER_TILE",
+__all__ = ["ICH_EPS", "MAX_WIDTH", "MIN_WIDTH", "ROWS_PER_TILE", "SUPERSTEP",
            *sorted(_LAZY)]
 
 

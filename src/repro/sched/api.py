@@ -34,7 +34,8 @@ from repro.core import tiling as T
 
 from .cache import CacheStats, ScheduleCache
 from .costs import CostProvider, as_cost_provider
-from .defaults import ICH_EPS, MAX_WIDTH, MIN_WIDTH, ROWS_PER_TILE
+from .defaults import (ICH_EPS, MAX_WIDTH, MIN_WIDTH, ROWS_PER_TILE,
+                       SUPERSTEP)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -47,7 +48,10 @@ class Schedule:
 
     `tiles` is the (T, R) iCh tile layout; `sizes`/`costs` are the per-item
     work units / float costs it was built from; `policy`/`p` are the
-    runtime-side defaults its simulator/executor methods use.
+    runtime-side defaults its simulator/executor methods use. `p` and
+    `superstep` are also the kernel-lowering defaults: `shard()` partitions
+    the tiles across `p` accelerator workers in supersteps of `superstep`
+    tiles (DESIGN.md §2.6).
     """
 
     sizes: np.ndarray        # (n,) int64 work units per item
@@ -57,11 +61,31 @@ class Schedule:
     tiles: T.TileSchedule
     # simulator time model inherited from the constructing LoopScheduler
     sim_params: S.SimParams = dataclasses.field(default_factory=S.SimParams)
+    superstep: int = SUPERSTEP
+    # memoized worker shard layouts keyed (p, superstep); benign build race
+    _shards: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------- lowering
     def lower(self) -> T.TileSchedule:
         """The static tile schedule a Pallas kernel consumes."""
         return self.tiles
+
+    def shard(self, *, p: Optional[int] = None,
+              superstep: Optional[int] = None) -> T.WorkerShards:
+        """The worker-sharded lowering of the tiles (DESIGN.md §2.6): a
+        cost-balanced, item-closed LPT partition of the tiles across `p`
+        accelerator workers, padded to supersteps of `superstep` tiles —
+        the layout the 2D `ich_*_sharded` kernels consume. Memoized per
+        (p, superstep) on this Schedule."""
+        key = (int(p if p is not None else self.p),
+               int(superstep if superstep is not None else self.superstep))
+        hit = self._shards.get(key)
+        if hit is None:
+            # benign build race: the first insert wins and both callers
+            # get the winning layout
+            hit = self._shards.setdefault(key, T.shard_schedule(
+                self.tiles, self.tile_cost(), key[0], superstep=key[1]))
+        return hit
 
     @property
     def n_items(self) -> int:
@@ -129,6 +153,24 @@ class Schedule:
                           params if params is not None else self.sim_params,
                           record_chunks=record_chunks)
 
+    def replay_sharded(self, *, p: Optional[int] = None,
+                       superstep: Optional[int] = None,
+                       params: Optional[S.SimParams] = None,
+                       record_chunks: bool = True) -> S.SimResult:
+        """Replay the WORKER-SHARDED lowering through the simulator: each
+        tile is dispatched on exactly the worker `shard()` assigned it
+        (`policies.assigned`, static assignment — no queue, no stealing).
+        Per-worker dispatched work must equal `shard().worker_cost(
+        tile_cost())` worker-for-worker, and under zero overhead/jitter the
+        makespan is the partition's max per-worker cost — the simulator
+        cross-check for the sharded kernel execution layer
+        (tests/test_sharding.py)."""
+        shards = self.shard(p=p, superstep=superstep)
+        return S.simulate(self.unit_costs(), shards.p,
+                          P.assigned(self.unit_ranges(), shards.worker),
+                          params if params is not None else self.sim_params,
+                          record_chunks=record_chunks)
+
     # -------------------------------------------------------- (b) executor
     def parallel_for(self, body: Callable[[int], None], *,
                      p: Optional[int] = None,
@@ -170,6 +212,7 @@ class LoopScheduler:
     def __init__(self, *, p: int = 8, policy: Optional[P.Policy] = None,
                  rows_per_tile: int = ROWS_PER_TILE,
                  min_w: int = MIN_WIDTH, max_w: int = MAX_WIDTH,
+                 superstep: int = SUPERSTEP,
                  cache_size: int = 32,
                  sim_params: Optional[S.SimParams] = None):
         self.p = int(p)
@@ -177,6 +220,7 @@ class LoopScheduler:
         self.rows_per_tile = int(rows_per_tile)
         self.min_w = int(min_w)
         self.max_w = int(max_w)
+        self.superstep = int(superstep)
         self.sim_params = sim_params if sim_params is not None else S.SimParams()
         self.cache = ScheduleCache(cache_size) if cache_size > 0 else None
 
@@ -185,7 +229,8 @@ class LoopScheduler:
                  p: Optional[int] = None,
                  rows_per_tile: Optional[int] = None,
                  width: Optional[int] = None,
-                 eps: Optional[float] = None) -> Schedule:
+                 eps: Optional[float] = None,
+                 superstep: Optional[int] = None) -> Schedule:
         """Construct (or fetch from cache) the schedule for `costs`.
 
         `costs` is a `CostProvider` or a bare per-item array
@@ -193,10 +238,13 @@ class LoopScheduler:
         `eps` (default: the policy's epsilon for adaptive policies, else
         the unified `ICH_EPS`) unless `width` pins it explicitly.
 
-        The cache key deliberately includes `policy` and `p` even though
-        tiles depend on neither: the returned `Schedule` carries them as
-        its simulator/executor defaults, so entries differing only in
-        runtime parameters are distinct (and bounded by `cache_size`).
+        The cache key includes the worker-partition parameters `p` and
+        `superstep`: the returned `Schedule` lowers to a p-worker shard
+        layout (and carries policy/p as its simulator/executor defaults),
+        so entries differing only in those must be distinct objects — a
+        p=2 schedule's memoized shards and packed kernels must never be
+        served to a p=4 caller (tests/test_sched_api.py proves distinct
+        p values don't collide).
         """
         provider = as_cost_provider(costs)
         pol = policy if policy is not None else self.policy
@@ -205,12 +253,13 @@ class LoopScheduler:
                   else self.rows_per_tile)
         band_eps = float(eps if eps is not None
                          else (pol.eps if pol.adaptive else ICH_EPS))
+        sstep = int(superstep if superstep is not None else self.superstep)
         # the policy keys as the full (frozen, hashable) dataclass, not just
         # label(): labels are lossy — taskloop's drops num_tasks, pretiled's
         # drops the actual ranges — and would alias distinct policies onto
         # one cache entry
         key = (provider.fingerprint(), pol, pp, rpt, width,
-               band_eps, self.min_w, self.max_w)
+               band_eps, self.min_w, self.max_w, sstep)
 
         def build() -> Schedule:
             sizes = provider.sizes()
@@ -218,7 +267,8 @@ class LoopScheduler:
                                      eps=band_eps, min_w=self.min_w,
                                      max_w=self.max_w)
             return Schedule(sizes=sizes, costs=provider.costs(), policy=pol,
-                            p=pp, tiles=tiles, sim_params=self.sim_params)
+                            p=pp, tiles=tiles, sim_params=self.sim_params,
+                            superstep=sstep)
 
         if self.cache is None:
             return build()
@@ -228,7 +278,8 @@ class LoopScheduler:
     def build(self, workload: str, *inputs,
               policy: Optional[P.Policy] = None, p: Optional[int] = None,
               rows_per_tile: Optional[int] = None,
-              width: Optional[int] = None, eps: Optional[float] = None):
+              width: Optional[int] = None, eps: Optional[float] = None,
+              superstep: Optional[int] = None):
         """Instantiate a registered workload's kernel op from raw inputs.
 
         Looks up `workload` in the registry (`sched.register` /
@@ -239,7 +290,8 @@ class LoopScheduler:
         entry = registry.get(workload)
         provider = entry.costs(*inputs)
         s = self.schedule(provider, policy=policy, p=p,
-                          rows_per_tile=rows_per_tile, width=width, eps=eps)
+                          rows_per_tile=rows_per_tile, width=width, eps=eps,
+                          superstep=superstep)
         return entry.build(s, *inputs)
 
     # --------------------------------------------- direct backend shortcuts

@@ -4,10 +4,14 @@ Schedule construction is O(n) and vectorized (`core/tiling.py`), but at
 serving rates even milliseconds per request add up — and most requests
 re-present a cost distribution the scheduler has already seen (the same
 CSR matrix, the same graph, the same batch shape). The cache keys on
-``(cost_fingerprint, policy, p, construction params)`` — the full frozen
-`Policy` dataclass, not its lossy ``label()`` — so a repeat
-`LoopScheduler.schedule()` call returns the previously built `Schedule`
-object without touching construction at all
+``(cost_fingerprint, policy, p, construction params, superstep)`` — the
+full frozen `Policy` dataclass, not its lossy ``label()``, and the worker
+PARTITION parameters `p`/`superstep`: a cached `Schedule` memoizes its
+worker-shard lowering (`Schedule.shard`) and the kernel ops pack payloads
+into that layout, so entries built for different worker counts must never
+alias (tests/test_sched_api.py proves distinct `p` values don't collide).
+A repeat `LoopScheduler.schedule()` call returns the previously built
+`Schedule` object without touching construction at all
 (`benchmarks/bench_schedule_build.py` records the hit path in
 `BENCH_schedule.json`).
 

@@ -24,3 +24,8 @@ ROWS_PER_TILE = 8
 # Tile-width clamp for `ich_tile_width` (work units per segment slot).
 MIN_WIDTH = 8
 MAX_WIDTH = 512
+
+# Tiles per kernel superstep (B): each grid step of a worker-sharded ich_*
+# kernel processes B tiles at once (a (B*R, W) payload block), amortizing
+# the per-step dispatch/prefetch overhead over B tiles (DESIGN.md §2.6).
+SUPERSTEP = 8

@@ -6,6 +6,16 @@ implementations behind `scheduler.build("spmv" | "bfs" | "kmeans", ...)`;
 the legacy `IChSpmv` / `IChBfs` / `IChKMeans` classes under
 `repro/kernels/ich_*/ops.py` are deprecation shims over this module.
 
+Ops execute on the worker-sharded 2D kernels (DESIGN.md §2.6): the
+schedule's tiles are cost-partitioned across `schedule.p` accelerator
+workers at superstep-block granularity (`Schedule.shard()`), payloads
+stay in the FLAT (T_pad, R, W) pack (padded to whole supersteps), and
+each grid step fetches one worker's next block of `schedule.superstep`
+tiles via the prefetched block-index stream — lowering to the shard
+layout moves no payload bytes. Outputs are bit-identical to the
+sequential (T,)-grid kernels (tests/test_sharding.py), which remain
+available in the kernel modules as the cross-check path.
+
 jax is imported inside the op constructors: deriving costs and constructing
 schedules is numpy-only, and the registry must be listable without paying
 the jax import.
@@ -37,22 +47,29 @@ class SpmvOp:
         import jax.numpy as jnp
         self.schedule = schedule
         self.n_rows = len(indptr) - 1
+        shards = schedule.shard()
         vals, cols = pack_csr(np.asarray(indptr), np.asarray(indices),
-                              np.asarray(data), schedule.tiles)
+                              np.asarray(data), schedule.tiles,
+                              pad_tiles_to=shards.superstep)
         self.width = schedule.width
+        self.p = shards.p
+        self.superstep = shards.superstep
         self.vals = jnp.asarray(vals)
         self.cols = jnp.asarray(cols)
-        self.rowid = jnp.asarray(schedule.item_id)
+        self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
+        self.blkid = jnp.asarray(shards.kernel_block_ids())
         self._jitted = {}  # interpret mode -> jitted spmv (compile once)
 
     def __call__(self, x, interpret: bool | None = None):
         import jax
-        from repro.kernels.ich_spmv.ich_spmv import ich_spmv
+        from repro.kernels.ich_spmv.ich_spmv import ich_spmv_sharded
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(
-                ich_spmv, n_rows=self.n_rows, interpret=interpret))
-        return self._jitted[interpret](self.vals, self.cols, self.rowid, x)
+                ich_spmv_sharded, n_rows=self.n_rows, p=self.p,
+                superstep=self.superstep, interpret=interpret))
+        return self._jitted[interpret](self.vals, self.cols, self.rowid,
+                                       self.blkid, x)
 
 
 class BfsOp:
@@ -62,24 +79,31 @@ class BfsOp:
         import jax.numpy as jnp
         self.schedule = schedule
         self.n = len(indptr) - 1
+        shards = schedule.shard()
         mask, cols = pack_csr(np.asarray(indptr), np.asarray(indices),
                               np.ones(len(indices), np.float32),
-                              schedule.tiles)
+                              schedule.tiles,
+                              pad_tiles_to=shards.superstep)
+        self.p = shards.p
+        self.superstep = shards.superstep
         self.mask = jnp.asarray(mask)
         self.cols = jnp.asarray(cols)
-        self.rowid = jnp.asarray(schedule.item_id)
+        self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
+        self.blkid = jnp.asarray(shards.kernel_block_ids())
         self._jitted = {}  # interpret mode -> jitted step (compile once)
 
     def step(self, frontier, visited, interpret: bool | None = None):
         """One frontier expansion; indicator in, indicator out."""
         import jax
         import jax.numpy as jnp
-        from repro.kernels.ich_bfs.ich_bfs import ich_bfs_step
+        from repro.kernels.ich_bfs.ich_bfs import ich_bfs_step_sharded
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(
-                ich_bfs_step, n_vertices=self.n, interpret=interpret))
+                ich_bfs_step_sharded, n_vertices=self.n, p=self.p,
+                superstep=self.superstep, interpret=interpret))
         return self._jitted[interpret](self.mask, self.cols, self.rowid,
+                                       self.blkid,
                                        jnp.asarray(frontier, jnp.float32),
                                        jnp.asarray(visited, jnp.float32))
 
@@ -109,17 +133,22 @@ class KMeansOp:
         self.schedule = schedule
         self.sizes = schedule.sizes
         self.n = schedule.n_items
-        self.rowid = jnp.asarray(schedule.item_id)
+        shards = schedule.shard()
+        self.p = shards.p
+        self.superstep = shards.superstep
+        self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
         self._jitted = {}  # interpret mode -> jitted assign (compile once)
 
     def __call__(self, points, centroids, interpret: bool | None = None):
         import jax
         import jax.numpy as jnp
-        from repro.kernels.ich_kmeans.ich_kmeans import ich_kmeans_assign
+        from repro.kernels.ich_kmeans.ich_kmeans import \
+            ich_kmeans_assign_sharded
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(
-                ich_kmeans_assign, interpret=interpret))
+                ich_kmeans_assign_sharded, p=self.p,
+                superstep=self.superstep, interpret=interpret))
         return self._jitted[interpret](jnp.asarray(points, jnp.float32),
                                        jnp.asarray(centroids, jnp.float32),
                                        self.rowid)

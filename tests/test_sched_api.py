@@ -83,6 +83,31 @@ def test_cache_hit_returns_same_object_and_skips_construction():
     assert scheduler.cache_stats.misses == 4
 
 
+def test_cache_keys_worker_partition_params_distinct_p_no_collision():
+    """p and superstep are worker-PARTITION parameters now (the Schedule
+    lowers to a p-worker shard layout), so distinct values must be
+    distinct cache entries — a p=2 schedule's memoized shards must never
+    be served to a p=4 caller."""
+    sizes = np.arange(1, 300, dtype=np.int64)
+    scheduler = LoopScheduler(cache_size=8)
+    s2 = scheduler.schedule(sizes, p=2)
+    s4 = scheduler.schedule(sizes, p=4)
+    assert s2 is not s4
+    assert scheduler.cache_stats.misses == 2
+    assert scheduler.cache_stats.hits == 0
+    # each lowers to its own worker count by default
+    assert s2.shard().p == 2 and s4.shard().p == 4
+    assert s2.shard().worker.shape == s4.shard().worker.shape
+    # repeat calls hit their own entries
+    assert scheduler.schedule(sizes, p=2) is s2
+    assert scheduler.schedule(sizes, p=4) is s4
+    assert scheduler.cache_stats.hits == 2
+    # superstep is part of the key too (it shapes the padded layout)
+    s2b = scheduler.schedule(sizes, p=2, superstep=2)
+    assert s2b is not s2 and s2b.shard().superstep == 2
+    assert scheduler.cache_stats.misses == 3
+
+
 def test_cache_distinguishes_policies_with_lossy_labels():
     # taskloop(4) and taskloop(16) share label() == "taskloop"; the cache
     # keys on the full Policy dataclass so they must NOT alias
