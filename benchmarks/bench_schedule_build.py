@@ -19,7 +19,13 @@ Measures, across item counts (default 10k / 100k / 1M):
     the interpreter, not the kernel), on the sequential (T,) reference
     grid AND the worker-sharded superstepped 2D grid at p in {1, 4} —
     sharded outputs are asserted bit-identical to the sequential grid, so
-    this section doubles as the CI sharded-kernel smoke.
+    this section doubles as the CI sharded-kernel smoke;
+  * the measured-cost refine loop (DESIGN.md §2.7) at the smallest size:
+    a jittered workload is scheduled from a-priori estimates, per-tile
+    true costs are observed from a sharded replay, and
+    `Schedule.observe(...).refine()` re-lowers — the simulated sharded
+    makespan on the TRUE costs is asserted monotonically non-increasing
+    across the rounds and reported against the perfect-balance bound.
 
 Writes `BENCH_schedule.json` at the repo root so future PRs have a recorded
 trajectory to regress against, and prints one CSV line per measurement.
@@ -173,6 +179,60 @@ def bench_cache(n: int, repeats: int) -> dict:
     }
 
 
+def bench_refine_loop(n: int, p: int = 8, rounds: int = None,
+                      jitter_seed: int = 5) -> dict:
+    """The closed feedback loop, demonstrated end to end (DESIGN.md §2.7).
+
+    A zipf workload's payload structure (row sizes) is known exactly, but
+    its TRUE per-item costs carry a hidden multiplicative jitter the
+    a-priori estimate (cost ~ size) misses — the paper's DVFS/cache-miss
+    heterogeneity (§3.2) at item granularity. Each round replays the
+    current schedule's worker-sharded lowering on the true costs, observes
+    the exact per-tile measured costs from the replay's chunk log, and
+    `observe(...).refine()` re-lowers under the refreshed estimates. The
+    simulated sharded makespan (zero overhead/jitter: the partition's max
+    per-worker true cost) must be monotonically non-increasing across the
+    rounds — asserted here, so CI catches any refinement regression — and
+    converges onto the perfect-balance bound (busy/p).
+    """
+    from repro.core.simulator import SimParams
+    from repro.sched import LoopScheduler, NnzCosts
+    from repro.sched.defaults import REFINE_ROUNDS
+
+    rounds = REFINE_ROUNDS if rounds is None else int(rounds)
+    rng = np.random.default_rng(jitter_seed)
+    sizes = workload(n)
+    indptr = np.concatenate([[0], np.cumsum(sizes)])
+    true = (1.0 + sizes) * rng.uniform(0.3, 3.0, n)
+    zero = SimParams(dispatch_overhead=0.0, local_dispatch_overhead=0.0,
+                     speed_jitter=0.0)
+    s = LoopScheduler(p=p).schedule(NnzCosts(indptr))
+    makespans, balance = [], None
+    t0 = time.perf_counter()
+    for r in range(rounds + 1):
+        rep = s.replay_refined(true, sharded=True, params=zero,
+                               record_chunks=True)
+        makespans.append(rep.makespan)
+        balance = rep.busy / p  # perfect-balance lower bound on this work
+        if r == rounds:
+            break
+        tile_true = np.array([wk for (*_, wk) in rep.chunk_log])
+        s = s.observe(tile_true, level="tile").refine()
+    elapsed = time.perf_counter() - t0
+    for a, b in zip(makespans, makespans[1:]):
+        assert b <= a + 1e-9, (
+            f"refine round increased sharded makespan: {makespans}")
+    assert s.generation == rounds
+    return {
+        "n_items": n, "p": p, "rounds": rounds,
+        "makespans": makespans,
+        "balance_bound": balance,
+        "improvement": 1.0 - makespans[-1] / makespans[0],
+        "imbalance_final": makespans[-1] / balance,
+        "loop_s": elapsed,
+    }
+
+
 def _timed(fn, repeats: int = 3):
     import jax
     out = jax.block_until_ready(fn())  # trace + compile
@@ -315,6 +375,13 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
         print(f"cache,n={row['n_items']},cold_s={row['cold_s']:.5f},"
               f"warm_hit_s={row['warm_hit_s']:.6f},"
               f"hit_speedup={row['hit_speedup']:.1f}")
+    rf = bench_refine_loop(sizes[0])
+    report["refine_loop"] = rf
+    print(f"refine_loop,n={rf['n_items']},p={rf['p']},"
+          + ",".join(f"round{i}_makespan={m:.1f}"
+                     for i, m in enumerate(rf["makespans"]))
+          + f",improvement={100 * rf['improvement']:.1f}%"
+          + f",imbalance_final={rf['imbalance_final']:.4f}")
     if kernel_step:
         ks = bench_kernel_step(sizes[0])
         report["kernel_step_interpret"] = ks

@@ -35,11 +35,13 @@ from .simulator import (
     SimResult,
     best_time_over_grid,
     eps_sensitivity,
+    replay_refined,
     simulate,
     speedup,
     worst_stealing,
 )
-from .welford import Welford, adapt_d, classify, ich_band, steal_merge, LOW, NORMAL, HIGH
+from .welford import (Welford, WelfordVec, adapt_d, classify, ich_band,
+                      steal_merge, LOW, NORMAL, HIGH)
 from .executor import parallel_for, ExecStats
 
 # The segmented kernel epilogue (core/segmented.py) is the one core module
@@ -65,7 +67,8 @@ __all__ = [
     "shard_schedule", "split_items",
     "segment_max", "segment_sum", "segmented_apply", "slot_window",
     "SimParams", "SimResult", "best_time_over_grid", "eps_sensitivity",
-    "simulate", "speedup", "worst_stealing",
-    "Welford", "adapt_d", "classify", "ich_band", "steal_merge",
+    "replay_refined", "simulate", "speedup", "worst_stealing",
+    "Welford", "WelfordVec", "adapt_d", "classify", "ich_band",
+    "steal_merge",
     "LOW", "NORMAL", "HIGH", "parallel_for", "ExecStats",
 ]

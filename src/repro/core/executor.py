@@ -12,11 +12,25 @@ It is also the engine behind ``repro/sched/data_sched.py`` (per-host
 input-shard dispatch with stealing, wrapped by ``data/pipeline.py``), where
 it runs for real in production; the `repro.sched.LoopScheduler` facade
 reaches it through `Schedule.parallel_for` / `parallel_for_units`.
+
+Measured-cost feedback (DESIGN.md §2.7): with ``record_chunks=True`` the
+executor records one ``(begin, end, worker, elapsed_seconds)`` entry per
+dispatched chunk — on BOTH the central-queue and distributed-deque paths —
+and, on the distributed path, one ``(thief, victim, begin, end)`` entry per
+committed steal. These are the wall-clock observations
+``Schedule.observe`` folds back into the cost refiner. Because thread
+interleaving is nondeterministic, ``deterministic=True`` additionally runs
+the SAME per-worker dispatch/steal logic cooperatively (round-robin, one
+dispatch-or-steal attempt per turn, single thread): with a fixed seed the
+chunk and steal logs are bit-reproducible run to run, which is what pins
+the instrumentation's accounting in tests (`tests/test_adaptive_properties
+.py::test_deterministic_replay_identical_steal_trace`).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -32,6 +46,12 @@ class ExecStats:
     failed_steals: int = 0
     ks: Optional[np.ndarray] = None
     ds: Optional[np.ndarray] = None
+    # per-dispatched-chunk records (begin, end, worker, elapsed_seconds),
+    # appended at chunk completion; filled when record_chunks=True
+    chunk_log: Optional[list] = None
+    # per-committed-steal records (thief, victim, begin, end), in commit
+    # order; filled when record_chunks=True on the distributed path
+    steal_log: Optional[list] = None
 
 
 class _Deque:
@@ -75,19 +95,32 @@ def parallel_for(
     p: int,
     policy: P.Policy,
     seed: int = 0,
+    record_chunks: bool = False,
+    deterministic: bool = False,
 ) -> ExecStats:
-    """Run `body(i)` for i in [0, n) on `p` threads under `policy`."""
+    """Run `body(i)` for i in [0, n) on `p` threads under `policy`.
+
+    `record_chunks` fills `ExecStats.chunk_log` (and `steal_log` on
+    distributed policies); `deterministic` replaces the threads with a
+    cooperative round-robin driver over the same per-worker logic, so the
+    recorded logs are bit-reproducible for a fixed seed.
+    """
     stats = ExecStats()
     stats_lock = threading.Lock()
+    if record_chunks:
+        stats.chunk_log = []
 
     if policy.kind == P.CENTRAL:
-        _run_central(n, body, p, policy, stats, stats_lock)
+        _run_central(n, body, p, policy, stats, stats_lock, deterministic)
     else:
-        _run_distributed(n, body, p, policy, stats, stats_lock, seed)
+        if record_chunks:
+            stats.steal_log = []
+        _run_distributed(n, body, p, policy, stats, stats_lock, seed,
+                         deterministic)
     return stats
 
 
-def _run_central(n, body, p, policy, stats, stats_lock):
+def _run_central(n, body, p, policy, stats, stats_lock, deterministic=False):
     pos = [0]
     tiles: Optional[list[tuple[int, int]]] = None
     if policy.law == "pretiled":
@@ -116,81 +149,135 @@ def _run_central(n, body, p, policy, stats, stats_lock):
             pos[0] = b + c
             return b, b + c
 
-    def worker():
-        while True:
-            b, e = grab()
-            if e <= b:
-                return
-            for i in range(b, e):
-                body(i)
-            with stats_lock:
-                stats.chunks += 1
+    def step(w: int) -> bool:
+        """One chunk grab + execution for (virtual) worker w; False when
+        the queue is drained."""
+        b, e = grab()
+        if e <= b:
+            return False
+        record = stats.chunk_log is not None  # clock reads only when asked
+        t0 = time.perf_counter() if record else 0.0
+        for i in range(b, e):
+            body(i)
+        if record:
+            dt = time.perf_counter() - t0
+        with stats_lock:
+            stats.chunks += 1
+            if record:
+                stats.chunk_log.append((b, e, w, dt))
+        return True
+
+    if deterministic:
+        live = list(range(p))
+        while live:
+            live = [w for w in live if step(w)]
+        return
+
+    def worker(w: int):
+        while step(w):
+            pass
 
     _run_threads(worker, p)
 
 
-def _run_distributed(n, body, p, policy, stats, stats_lock, seed):
+def _run_distributed(n, body, p, policy, stats, stats_lock, seed,
+                     deterministic=False):
     bounds = np.linspace(0, n, p + 1).astype(np.int64)
     deques = [_Deque(int(bounds[i]), int(bounds[i + 1])) for i in range(p)]
     ks = np.zeros(p)
     ds = np.full(p, P.ich_initial_d(p))
     done = np.zeros(p, dtype=bool)
+    rngs = [np.random.default_rng(seed + w) for w in range(p)]
+
+    # step outcomes
+    RAN, STOLE, FAILED, EMPTY = 0, 1, 2, 3
+
+    def step(w: int) -> int:
+        """One dispatch-or-steal attempt for worker w — the unit the
+        threaded loop AND the deterministic round-robin driver share."""
+        q = deques[w]
+        if policy.adaptive:
+            chunk = P.ich_chunk(q.size(), ds[w])
+        else:
+            chunk = max(1, policy.chunk)
+        b, e = q.pop_front(chunk)
+        if e > b:
+            record = stats.chunk_log is not None
+            t0 = time.perf_counter() if record else 0.0
+            for i in range(b, e):
+                body(i)
+            if record:
+                dt = time.perf_counter() - t0
+            ks[w] += e - b
+            if policy.adaptive:
+                mu, delta = W.ich_band(ks, policy.eps)
+                ds[w] = W.adapt_d(ds[w], W.classify(ks[w], mu, delta))
+            with stats_lock:
+                stats.chunks += 1
+                if record:
+                    stats.chunk_log.append((b, e, w, dt))
+            return RAN
+        # steal phase
+        victims = [v for v in range(p) if v != w and deques[v].size() > 0]
+        if not victims:
+            return EMPTY
+        v = int(victims[rngs[w].integers(len(victims))])
+        sb, se = deques[v].steal_back_half()
+        if se <= sb:
+            with stats_lock:
+                stats.failed_steals += 1
+            return FAILED
+        if policy.adaptive:
+            ks[w], ds[w] = W.steal_merge(ks[w], ds[w], ks[v], ds[v])
+        dq = deques[w]
+        with dq.lock:
+            dq.begin, dq.end = sb, se
+        with stats_lock:
+            stats.steals += 1
+            if stats.steal_log is not None:
+                stats.steal_log.append((w, v, sb, se))
+        return STOLE
+
+    if deterministic:
+        # Cooperative round-robin: worker 0..p-1 each take one step per
+        # sweep. A worker retires when its step found no work anywhere
+        # (steals within the sweep re-activate nobody: once every deque is
+        # empty it stays empty — steals only move work between deques).
+        live = list(range(p))
+        while live:
+            nxt = []
+            for w in live:
+                r = step(w)
+                if r == EMPTY and all(d.size() == 0 for d in deques):
+                    continue
+                nxt.append(w)
+            live = nxt
+        stats.ks = ks
+        stats.ds = ds
+        return
 
     def worker(w: int):
-        rng = np.random.default_rng(seed + w)
         while True:
-            q = deques[w]
-            if policy.adaptive:
-                chunk = P.ich_chunk(q.size(), ds[w])
-            else:
-                chunk = max(1, policy.chunk)
-            b, e = q.pop_front(chunk)
-            if e > b:
-                for i in range(b, e):
-                    body(i)
-                ks[w] += e - b
-                if policy.adaptive:
-                    mu, delta = W.ich_band(ks, policy.eps)
-                    ds[w] = W.adapt_d(ds[w], W.classify(ks[w], mu, delta))
-                with stats_lock:
-                    stats.chunks += 1
+            r = step(w)
+            if r != EMPTY:
                 continue
-            # steal phase
-            victims = [v for v in range(p) if v != w and deques[v].size() > 0]
-            if not victims:
-                if all(deques[v].size() == 0 for v in range(p)):
-                    done[w] = True
-                    if done.all():
-                        return
-                    # other workers may still publish stolen work; one retry
-                    # round then exit (termination: all queues empty is stable
-                    # here because steals only move work between queues).
+            if all(deques[v].size() == 0 for v in range(p)):
+                done[w] = True
+                if done.all():
                     return
-                continue
-            v = int(victims[rng.integers(len(victims))])
-            sb, se = deques[v].steal_back_half()
-            if se <= sb:
-                with stats_lock:
-                    stats.failed_steals += 1
-                continue
-            if policy.adaptive:
-                ks[w], ds[w] = W.steal_merge(ks[w], ds[w], ks[v], ds[v])
-            dq = deques[w]
-            with dq.lock:
-                dq.begin, dq.end = sb, se
-            with stats_lock:
-                stats.steals += 1
+                # other workers may still publish stolen work; one retry
+                # round then exit (termination: all queues empty is stable
+                # here because steals only move work between queues).
+                return
+            continue
 
-    _run_threads(worker, p, pass_index=True)
+    _run_threads(worker, p)
     stats.ks = ks
     stats.ds = ds
 
 
-def _run_threads(fn, p, pass_index=False):
-    threads = [
-        threading.Thread(target=(lambda w=w: fn(w)) if pass_index else fn)
-        for w in range(p)
-    ]
+def _run_threads(fn, p):
+    threads = [threading.Thread(target=lambda w=w: fn(w)) for w in range(p)]
     for t in threads:
         t.start()
     for t in threads:

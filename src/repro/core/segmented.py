@@ -154,6 +154,29 @@ def segmented_apply_batch(out_ref, rows: jax.Array, values: jax.Array, *,
         segmented_apply(out_ref, rows[b], values[b], combine=combine)
 
 
+def emit_step_cost(cost_ref, rows: jax.Array, slot_cost: jax.Array,
+                   j) -> None:
+    """Accumulate one superstep's executed cost into this worker's
+    (1, n_steps) cost-output row at step j (measured-cost feedback,
+    DESIGN.md §2.7).
+
+    `slot_cost` is the fetched (B, R) per-slot scheduled-cost block and
+    `rows` the matching prefetched item ids; slots whose id is -1
+    contribute nothing — padding steps fetch a CLAMPED block (block 0),
+    so without the mask they would double-count it. The emitted stream
+    therefore accounts exactly the tiles this worker really executed, and
+    summing it recovers the schedule's per-worker tile-cost totals
+    (tests/test_adaptive_properties.py). The per-step scalar lands as a
+    masked one-hot row add — vector-friendly on the TPU, identical in
+    interpret mode. Callers zero `cost_ref` at step 0 alongside their
+    accumulator."""
+    step_cost = jnp.sum(jnp.where(rows >= 0, slot_cost, 0.0))
+    n_steps = cost_ref.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n_steps), 1)
+    cost_ref[...] += jnp.where(lane == j,
+                               step_cost.astype(cost_ref.dtype), 0)
+
+
 def worker_reduce(acc: jax.Array, combine: str) -> jax.Array:
     """Fold (p, n) per-worker accumulators into the final (n,) output.
 

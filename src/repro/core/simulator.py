@@ -60,6 +60,9 @@ class SimResult:
     # per-dispatched-chunk records (begin, end, worker, work), in dispatch
     # order; filled when simulate(..., record_chunks=True)
     chunk_log: Optional[list] = None
+    # per-worker busy time (sum of work/speed dispatched to each worker) —
+    # the imbalance diagnostic the measured-cost refiner reports on
+    worker_busy: Optional[np.ndarray] = None
 
     @property
     def efficiency(self) -> float:
@@ -102,6 +105,7 @@ def simulate(
     n = len(costs)
     csum = np.concatenate([[0.0], np.cumsum(costs)])
     res = SimResult(0.0, n, p, policy.label())
+    res.worker_busy = np.zeros(p)
     if record_chunks:
         res.chunk_log = []
     if n == 0:
@@ -153,6 +157,7 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
                 res.chunk_log.append((b, e, w, work))
             res.chunks += 1
             res.busy += work / speeds[w]
+            res.worker_busy[w] += work / speeds[w]
             res.overhead += grab_cost
         res.makespan = float(tw.max()) if p else 0.0
         return
@@ -183,6 +188,7 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
                     res.chunk_log.append((b, e, w, work))
                 res.chunks += 1
                 res.busy += work / speeds[w]
+                res.worker_busy[w] += work / speeds[w]
                 res.overhead += grab_cost
             makespan = max(makespan, tw)
         res.makespan = makespan
@@ -227,6 +233,7 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
         done = start + grab_cost + work / speeds[w]
         res.chunks += 1
         res.busy += work / speeds[w]
+        res.worker_busy[w] += work / speeds[w]
         res.overhead += (start - t) + grab_cost
         seq += 1
         heapq.heappush(heap, (done, seq, w))
@@ -303,6 +310,7 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
             done = start + params.local_dispatch_overhead + work / speeds[w]
             res.chunks += 1
             res.busy += work / speeds[w]
+            res.worker_busy[w] += work / speeds[w]
             res.overhead += (start - t) + params.local_dispatch_overhead
             push(done, w, 1, chunk)
             continue
@@ -352,6 +360,39 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
     res.makespan = makespan
     res.ks = ks
     res.ds = ds
+
+
+# ----------------------------------------------------------------------------
+# Schedule replay on refreshed costs (measured-cost feedback, DESIGN.md §2.7)
+# ----------------------------------------------------------------------------
+
+def replay_refined(
+    unit_costs: np.ndarray,
+    ranges,
+    p: int,
+    workers: Optional[np.ndarray] = None,
+    params: SimParams = SimParams(),
+    record_chunks: bool = False,
+) -> SimResult:
+    """Replay an already-constructed schedule's chunk list on a REFRESHED
+    per-unit cost array — the deterministic check of refinement quality.
+
+    A constructed schedule fixes `ranges` ([begin, end) chunks in flattened
+    work-unit space, e.g. `TileSchedule.slot_ranges()`); `unit_costs` is
+    what those units are NOW believed (or measured) to cost, which need not
+    be the estimates the schedule was built from. With `workers=None` the
+    chunks go through the central pretiled queue (`policies.pretiled`);
+    with a per-chunk worker array they replay as the static sharded
+    assignment (`policies.assigned`). The makespan answers "what would this
+    schedule cost on the true workload" — `Schedule.replay_refined` feeds
+    it per-item costs, and the observe/refine loop must drive it down
+    (benchmarks/bench_schedule_build.py's refine-loop section,
+    tests/test_adaptive_properties.py).
+    """
+    pol = (P.pretiled(ranges) if workers is None
+           else P.assigned(ranges, workers))
+    return simulate(np.asarray(unit_costs, np.float64), int(p), pol, params,
+                    record_chunks=record_chunks)
 
 
 # ----------------------------------------------------------------------------

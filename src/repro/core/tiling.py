@@ -234,11 +234,13 @@ class TileSchedule:
         """Work units (e.g. nonzeros) packed into each tile, shape (T,)."""
         return self.seg_len.sum(axis=1).astype(np.int64)
 
-    def tile_cost(self, costs: np.ndarray, sizes: np.ndarray) -> np.ndarray:
-        """Per-tile cost when item i's cost is spread evenly over its
-        `sizes[i]` work units (zero-size items carry no units). This is the
-        quantity the discrete-event simulator must reproduce chunk-by-chunk
-        for the pretiled schedule — see `slot_ranges`."""
+    def slot_cost(self, costs: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+        """Per-SLOT cost decomposition, shape (T, R): item i's cost spread
+        evenly over its `sizes[i]` work units, times the units each slot
+        holds (padding slots and zero-size items are 0). Rows sum to
+        `tile_cost`; this is the granularity the sharded kernels' cost
+        output accounts at and the measured-cost refiner distributes
+        tile-level observations with (`sched/adaptive.py`)."""
         costs = np.asarray(costs, np.float64)
         sizes = np.asarray(sizes, np.float64)
         unit = np.divide(costs, sizes, out=np.zeros_like(costs),
@@ -246,7 +248,14 @@ class TileSchedule:
         per_slot = np.where(self.item_id >= 0,
                             unit[np.clip(self.item_id, 0, self.n_items - 1)],
                             0.0)
-        return (per_slot * self.seg_len).sum(axis=1)
+        return per_slot * self.seg_len
+
+    def tile_cost(self, costs: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+        """Per-tile cost when item i's cost is spread evenly over its
+        `sizes[i]` work units (zero-size items carry no units). This is the
+        quantity the discrete-event simulator must reproduce chunk-by-chunk
+        for the pretiled schedule — see `slot_ranges`."""
+        return self.slot_cost(costs, sizes).sum(axis=1)
 
     def slot_ranges(self) -> np.ndarray:
         """(T, 2) [begin, end) chunks in flattened work-unit space.

@@ -48,6 +48,52 @@ class Welford:
         return float(np.sqrt(self.variance))
 
 
+@dataclasses.dataclass
+class WelfordVec:
+    """Vectorized Welford: one running (count, mean, M2) triple PER ITEM.
+
+    The measured-cost feedback loop (`sched/adaptive.py`) folds one
+    observed cost sample per item per execution round; a Python-object
+    `Welford` per item would cost O(n) attribute churn per round, so the
+    same recurrence runs as three aligned arrays. `update(x, mask)` is the
+    scalar `Welford.update` applied at every `mask`-selected lane —
+    `tests/test_adaptive_properties.py` asserts lane-for-lane agreement
+    with the scalar oracle.
+    """
+
+    count: np.ndarray  # (n,) int64 samples folded per item
+    mean: np.ndarray   # (n,) float64 running mean
+    m2: np.ndarray     # (n,) float64 running sum of squared deviations
+
+    @classmethod
+    def zeros(cls, n: int) -> "WelfordVec":
+        return cls(np.zeros(n, np.int64), np.zeros(n), np.zeros(n))
+
+    @property
+    def n(self) -> int:
+        return int(self.count.size)
+
+    def update(self, xs: np.ndarray, mask: np.ndarray | None = None) -> None:
+        """Fold one sample per item; items where `mask` is False keep their
+        stats untouched (an execution round that never observed them)."""
+        xs = np.asarray(xs, np.float64)
+        if mask is None:
+            mask = np.ones(self.n, dtype=bool)
+        cnt = self.count + mask
+        safe = np.maximum(cnt, 1)
+        d = xs - self.mean
+        mean = self.mean + np.where(mask, d / safe, 0.0)
+        self.m2 += np.where(mask, d * (xs - mean), 0.0)
+        self.mean = mean
+        self.count = cnt
+
+    @property
+    def variance(self) -> np.ndarray:
+        return np.divide(self.m2, self.count,
+                         out=np.zeros_like(self.m2),
+                         where=self.count > 0)
+
+
 def ich_band(ks: np.ndarray, eps: float) -> tuple[float, float]:
     """Paper eq. 8: the (mu, delta) band from per-worker completed counts.
 

@@ -41,8 +41,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.segmented import (segmented_apply, segmented_apply_batch,
-                                  worker_reduce)
+from repro.core.segmented import (emit_step_cost, segmented_apply,
+                                  segmented_apply_batch, worker_reduce)
 
 
 def _bfs_kernel(rowid_ref, mask_ref, cols_ref, frontier_ref, visited_ref,
@@ -91,14 +91,16 @@ def ich_bfs_step(mask, cols, rowid, frontier, visited, n_vertices: int,
     )(rowid, mask, cols, frontier, visited)
 
 
-def _bfs_kernel_sharded(rowid_ref, blkid_ref, mask_ref, cols_ref,
-                        frontier_ref, visited_ref, out_ref, *,
-                        n_vertices: int, S: int, B: int):
+def _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
+                      visited_ref, out_ref, slotc_ref, cost_ref, *,
+                      n_vertices: int, S: int, B: int):
     w, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if cost_ref is not None:
+            cost_ref[...] = jnp.zeros_like(cost_ref)
 
     mask = mask_ref[...]  # (B, R, W): one superstep of this worker's shard
     cols = cols_ref[...]
@@ -108,16 +110,39 @@ def _bfs_kernel_sharded(rowid_ref, blkid_ref, mask_ref, cols_ref,
     rows = rowid_ref[pl.ds(w * S + j * B, B)]  # (B, R) SMEM scalars
     inc = hit * (1.0 - visited[jnp.clip(rows, 0, n_vertices - 1)])
     segmented_apply_batch(out_ref, rows, inc, combine="max")
+    if cost_ref is not None:
+        emit_step_cost(cost_ref, rows, slotc_ref[...], j)
+
+
+def _bfs_kernel_sharded(rowid_ref, blkid_ref, mask_ref, cols_ref,
+                        frontier_ref, visited_ref, out_ref, *,
+                        n_vertices: int, S: int, B: int):
+    _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
+                      visited_ref, out_ref, None, None,
+                      n_vertices=n_vertices, S=S, B=B)
+
+
+def _bfs_kernel_sharded_cost(rowid_ref, blkid_ref, mask_ref, cols_ref,
+                             slotc_ref, frontier_ref, visited_ref, out_ref,
+                             cost_ref, *, n_vertices: int, S: int, B: int):
+    _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
+                      visited_ref, out_ref, slotc_ref, cost_ref,
+                      n_vertices=n_vertices, S=S, B=B)
 
 
 def ich_bfs_step_sharded(mask, cols, rowid, blkid, frontier, visited,
                          n_vertices: int, p: int, superstep: int,
-                         *, interpret: bool = False):
+                         *, slot_cost=None, interpret: bool = False):
     """One frontier expansion on the worker-sharded 2D grid. mask/cols
     (T_pad, R, W): the FLAT packed payload with T padded to whole
     supersteps; rowid (p*S, R) and blkid (p*S_B,) from
     `core.tiling.WorkerShards`; frontier/visited (n,) float32 indicators.
-    Returns the next frontier (n,)."""
+    Returns the next frontier (n,).
+
+    With `slot_cost` ((T_pad, R) per-slot scheduled costs) the kernel
+    additionally emits the per-worker, per-superstep cost output and
+    returns (next_frontier, costs) — the measured-cost feedback stream
+    (DESIGN.md §2.7)."""
     T_pad, R, W = mask.shape
     p, B = int(p), int(superstep)
     n_steps = int(blkid.shape[0]) // p
@@ -125,32 +150,53 @@ def ich_bfs_step_sharded(mask, cols, rowid, blkid, frontier, visited,
     if blkid.shape[0] != p * n_steps or rowid.shape[0] != p * S or T_pad % B:
         raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
                          f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
-    kernel = functools.partial(_bfs_kernel_sharded, n_vertices=n_vertices,
-                               S=S, B=B)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # sharded rowid + block ids to SMEM
-        grid=(p, n_steps),
-        in_specs=[
-            pl.BlockSpec((B, R, W),
-                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                                   0, 0)),
-            pl.BlockSpec((B, R, W),
-                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                                   0, 0)),
-            pl.BlockSpec(frontier.shape, lambda w, j, rowid, blk: (0,)),
-            pl.BlockSpec(visited.shape, lambda w, j, rowid, blk: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, n_vertices),
-                               lambda w, j, rowid, blk: (w, 0)),
-    )
-    acc = pl.pallas_call(
+    emit = slot_cost is not None
+    in_specs = [
+        pl.BlockSpec((B, R, W),
+                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                               0, 0)),
+        pl.BlockSpec((B, R, W),
+                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                               0, 0)),
+    ]
+    out_specs = pl.BlockSpec((1, n_vertices),
+                             lambda w, j, rowid, blk: (w, 0))
+    out_shape = jax.ShapeDtypeStruct((p, n_vertices), frontier.dtype)
+    if emit:
+        kernel = functools.partial(_bfs_kernel_sharded_cost,
+                                   n_vertices=n_vertices, S=S, B=B)
+        in_specs.append(pl.BlockSpec(
+            (B, R), lambda w, j, rowid, blk: (blk[w * (S // B) + j], 0)))
+        out_specs = [out_specs, pl.BlockSpec(
+            (1, n_steps), lambda w, j, rowid, blk: (w, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((p, n_steps), jnp.float32)]
+    else:
+        kernel = functools.partial(_bfs_kernel_sharded,
+                                   n_vertices=n_vertices, S=S, B=B)
+    in_specs += [
+        pl.BlockSpec(frontier.shape, lambda w, j, rowid, blk: (0,)),
+        pl.BlockSpec(visited.shape, lambda w, j, rowid, blk: (0,)),
+    ]
+    call = pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((p, n_vertices), frontier.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # sharded rowid + block ids to SMEM
+            grid=(p, n_steps),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
         # workers are independent (item-closed partition): the shard
         # dimension may run concurrently across TPU cores / megacore
         compiler_params=None if interpret else pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(rowid, blkid, mask, cols, frontier, visited)
+    )
+    if emit:
+        acc, costs = call(rowid, blkid, mask, cols,
+                          jnp.asarray(slot_cost, jnp.float32),
+                          frontier, visited)
+        return worker_reduce(acc, "max"), costs
+    acc = call(rowid, blkid, mask, cols, frontier, visited)
     return worker_reduce(acc, "max")

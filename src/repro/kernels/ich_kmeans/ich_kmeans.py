@@ -37,8 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.segmented import (segmented_apply, segmented_apply_batch,
-                                  worker_reduce)
+from repro.core.segmented import (emit_step_cost, segmented_apply,
+                                  segmented_apply_batch, worker_reduce)
 
 
 def _kmeans_kernel(rowid_ref, pts_ref, cent_ref, out_ref, *, n_points: int):
@@ -82,13 +82,15 @@ def ich_kmeans_assign(points, centroids, rowid, *, interpret: bool = False):
     )(rowid, points, centroids)
 
 
-def _kmeans_kernel_sharded(rowid_ref, pts_ref, cent_ref, out_ref, *,
-                           n_points: int, S: int, B: int):
+def _kmeans_sharded_body(rowid_ref, pts_ref, cent_ref, out_ref, slotc_ref,
+                         cost_ref, *, n_points: int, S: int, B: int):
     w, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if cost_ref is not None:
+            cost_ref[...] = jnp.zeros_like(cost_ref)
 
     pts = pts_ref[...]    # (n, D)
     cent = cent_ref[...]  # (K, D)
@@ -98,38 +100,78 @@ def _kmeans_kernel_sharded(rowid_ref, pts_ref, cent_ref, out_ref, *,
     d2 = jnp.sum((sel[:, None, :] - cent[None, :, :]) ** 2, axis=-1)
     assign = jnp.argmin(d2, axis=1).astype(jnp.int32).reshape(ids.shape)
     segmented_apply_batch(out_ref, ids, assign, combine="store")
+    if cost_ref is not None:
+        emit_step_cost(cost_ref, ids, slotc_ref[...], j)
+
+
+def _kmeans_kernel_sharded(rowid_ref, pts_ref, cent_ref, out_ref, *,
+                           n_points: int, S: int, B: int):
+    _kmeans_sharded_body(rowid_ref, pts_ref, cent_ref, out_ref, None, None,
+                         n_points=n_points, S=S, B=B)
+
+
+def _kmeans_kernel_sharded_cost(rowid_ref, pts_ref, cent_ref, slotc_ref,
+                                out_ref, cost_ref, *, n_points: int,
+                                S: int, B: int):
+    _kmeans_sharded_body(rowid_ref, pts_ref, cent_ref, out_ref, slotc_ref,
+                         cost_ref, n_points=n_points, S=S, B=B)
 
 
 def ich_kmeans_assign_sharded(points, centroids, rowid, p: int,
-                              superstep: int, *, interpret: bool = False):
+                              superstep: int, *, slot_cost=None,
+                              interpret: bool = False):
     """Worker-sharded 2D grid. points (n, D); centroids (K, D); rowid
     (p*S, R) in the shard layout of `core.tiling.WorkerShards`. Returns
-    assignments (n,) int32."""
+    assignments (n,) int32.
+
+    With `slot_cost` — here already in the SHARD layout (p*S, R), matching
+    `rowid`, since this kernel has no flat-payload indirection — the
+    kernel additionally emits the per-worker, per-superstep cost output
+    and returns (assignments, costs) (DESIGN.md §2.7)."""
     n = points.shape[0]
     PS, R = rowid.shape
     p, B = int(p), int(superstep)
     S = PS // p
     if PS != p * S or S % B:
         raise ValueError(f"shard layout mismatch: {PS} rows, p={p}, B={B}")
-    kernel = functools.partial(_kmeans_kernel_sharded, n_points=n, S=S, B=B)
     n_steps = S // B
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,  # sharded rowid prefetched to SMEM
-        grid=(p, n_steps),
-        in_specs=[
-            pl.BlockSpec(points.shape, lambda w, j, rowid: (0, 0)),
-            pl.BlockSpec(centroids.shape, lambda w, j, rowid: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n), lambda w, j, rowid: (w, 0)),
-    )
-    acc = pl.pallas_call(
+    emit = slot_cost is not None
+    in_specs = [
+        pl.BlockSpec(points.shape, lambda w, j, rowid: (0, 0)),
+        pl.BlockSpec(centroids.shape, lambda w, j, rowid: (0, 0)),
+    ]
+    out_specs = pl.BlockSpec((1, n), lambda w, j, rowid: (w, 0))
+    out_shape = jax.ShapeDtypeStruct((p, n), jnp.int32)
+    if emit:
+        kernel = functools.partial(_kmeans_kernel_sharded_cost, n_points=n,
+                                   S=S, B=B)
+        in_specs.append(pl.BlockSpec(
+            (B, R), lambda w, j, rowid: (w * (S // B) + j, 0)))
+        out_specs = [out_specs, pl.BlockSpec(
+            (1, n_steps), lambda w, j, rowid: (w, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((p, n_steps), jnp.float32)]
+    else:
+        kernel = functools.partial(_kmeans_kernel_sharded, n_points=n,
+                                   S=S, B=B)
+    call = pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((p, n), jnp.int32),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,  # sharded rowid prefetched to SMEM
+            grid=(p, n_steps),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
         # workers are independent (item-closed partition): the shard
         # dimension may run concurrently across TPU cores / megacore
         compiler_params=None if interpret else pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(rowid, points, centroids)
+    )
+    if emit:
+        acc, costs = call(rowid, points, centroids,
+                          jnp.asarray(slot_cost, jnp.float32))
+        return worker_reduce(acc, "store"), costs
+    acc = call(rowid, points, centroids)
     return worker_reduce(acc, "store")

@@ -45,8 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.segmented import (segmented_apply, segmented_apply_batch,
-                                  worker_reduce)
+from repro.core.segmented import (emit_step_cost, segmented_apply,
+                                  segmented_apply_batch, worker_reduce)
 from repro.core.tiling import build_schedule, ich_tile_width, pack_csr
 from repro.sched.defaults import ICH_EPS
 
@@ -109,13 +109,15 @@ def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
     )(rowid, vals, cols, x)
 
 
-def _spmv_kernel_sharded(rowid_ref, blkid_ref, vals_ref, cols_ref, x_ref,
-                         out_ref, *, S: int, B: int):
+def _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
+                       slotc_ref, cost_ref, *, S: int, B: int):
     w, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if cost_ref is not None:
+            cost_ref[...] = jnp.zeros_like(cost_ref)
 
     vals = vals_ref[...]  # (B, R, W): one superstep of this worker's shard
     cols = cols_ref[...]
@@ -125,15 +127,38 @@ def _spmv_kernel_sharded(rowid_ref, blkid_ref, vals_ref, cols_ref, x_ref,
     # B in-order windowed RMWs into THIS worker's accumulator row — the
     # same fold order the sequential grid uses for these tiles
     segmented_apply_batch(out_ref, rows, partial, combine="add")
+    if cost_ref is not None:
+        emit_step_cost(cost_ref, rows, slotc_ref[...], j)
+
+
+def _spmv_kernel_sharded(rowid_ref, blkid_ref, vals_ref, cols_ref, x_ref,
+                         out_ref, *, S: int, B: int):
+    _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
+                       None, None, S=S, B=B)
+
+
+def _spmv_kernel_sharded_cost(rowid_ref, blkid_ref, vals_ref, cols_ref,
+                              slotc_ref, x_ref, out_ref, cost_ref, *,
+                              S: int, B: int):
+    _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
+                       slotc_ref, cost_ref, S=S, B=B)
 
 
 def ich_spmv_sharded(vals, cols, rowid, blkid, x, n_rows: int, p: int,
-                     superstep: int, *, interpret: bool = False):
+                     superstep: int, *, slot_cost=None,
+                     interpret: bool = False):
     """Worker-sharded 2D grid. vals/cols (T_pad, R, W): the FLAT packed
     payload with T padded to whole supersteps (`pack_csr(...,
     pad_tiles_to=B)`); rowid (p*S, R) and blkid (p*S_B,) from
     `core.tiling.WorkerShards` (`shard_item_id` / `kernel_block_ids`);
-    x (n,). Returns y (n_rows,)."""
+    x (n,). Returns y (n_rows,).
+
+    With `slot_cost` — the (T_pad, R) per-slot scheduled-cost stream
+    (`Schedule.slot_cost` padded to T_pad) — the kernel additionally emits
+    a per-worker, per-superstep cost output (p, S_B) and returns
+    (y, costs): the measured-cost feedback the refiner folds back into
+    per-item estimates (DESIGN.md §2.7). Padding steps emit 0, so per-
+    worker sums account exactly the schedule's tile costs."""
     T_pad, R, W = vals.shape
     p, B = int(p), int(superstep)
     n_steps = int(blkid.shape[0]) // p
@@ -141,31 +166,49 @@ def ich_spmv_sharded(vals, cols, rowid, blkid, x, n_rows: int, p: int,
     if blkid.shape[0] != p * n_steps or rowid.shape[0] != p * S or T_pad % B:
         raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
                          f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
-    kernel = functools.partial(_spmv_kernel_sharded, S=S, B=B)
+    emit = slot_cost is not None
+    in_specs = [
+        # data-dependent superstep fetch: worker w's j-th block of B
+        # tiles, read straight from the flat payload
+        pl.BlockSpec((B, R, W),
+                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                               0, 0)),
+        pl.BlockSpec((B, R, W),
+                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
+                                               0, 0)),
+    ]
+    out_specs = pl.BlockSpec((1, n_rows), lambda w, j, rowid, blk: (w, 0))
+    out_shape = jax.ShapeDtypeStruct((p, n_rows), x.dtype)
+    if emit:
+        kernel = functools.partial(_spmv_kernel_sharded_cost, S=S, B=B)
+        in_specs.append(pl.BlockSpec(
+            (B, R), lambda w, j, rowid, blk: (blk[w * (S // B) + j], 0)))
+        out_specs = [out_specs, pl.BlockSpec(
+            (1, n_steps), lambda w, j, rowid, blk: (w, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((p, n_steps), jnp.float32)]
+    else:
+        kernel = functools.partial(_spmv_kernel_sharded, S=S, B=B)
+    in_specs.append(pl.BlockSpec(x.shape, lambda w, j, rowid, blk: (0,)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # sharded rowid + block ids to SMEM
         grid=(p, n_steps),
-        in_specs=[
-            # data-dependent superstep fetch: worker w's j-th block of B
-            # tiles, read straight from the flat payload
-            pl.BlockSpec((B, R, W),
-                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                                   0, 0)),
-            pl.BlockSpec((B, R, W),
-                         lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                                   0, 0)),
-            pl.BlockSpec(x.shape, lambda w, j, rowid, blk: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, n_rows), lambda w, j, rowid, blk: (w, 0)),
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
-    acc = pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((p, n_rows), x.dtype),
+        out_shape=out_shape,
         # workers are independent (item-closed partition): the shard
         # dimension may run concurrently across TPU cores / megacore
         compiler_params=None if interpret else pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(rowid, blkid, vals, cols, x)
+    )
+    if emit:
+        acc, costs = call(rowid, blkid, vals, cols,
+                          jnp.asarray(slot_cost, jnp.float32), x)
+        return worker_reduce(acc, "add"), costs
+    acc = call(rowid, blkid, vals, cols, x)
     return worker_reduce(acc, "add")

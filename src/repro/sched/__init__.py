@@ -32,11 +32,14 @@ _LAZY = {
     "LoopScheduler": "api",
     "Schedule": "api",
     "default_scheduler": "api",
+    # measured-cost feedback (sched/adaptive.py)
+    "CostRefiner": "adaptive",
     # cost providers (sched/costs.py)
     "CostProvider": "costs",
     "DegreeCosts": "costs",
     "ExplicitCosts": "costs",
     "NnzCosts": "costs",
+    "RefinedCosts": "costs",
     "as_cost_provider": "costs",
     # schedule cache (sched/cache.py)
     "CacheStats": "cache",

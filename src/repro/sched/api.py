@@ -32,8 +32,9 @@ from repro.core import policies as P
 from repro.core import simulator as S
 from repro.core import tiling as T
 
+from .adaptive import CostRefiner
 from .cache import CacheStats, ScheduleCache
-from .costs import CostProvider, as_cost_provider
+from .costs import CostProvider, RefinedCosts, as_cost_provider
 from .defaults import (ICH_EPS, MAX_WIDTH, MIN_WIDTH, ROWS_PER_TILE,
                        SUPERSTEP)
 
@@ -64,6 +65,24 @@ class Schedule:
     superstep: int = SUPERSTEP
     # memoized worker shard layouts keyed (p, superstep); benign build race
     _shards: dict = dataclasses.field(default_factory=dict, repr=False)
+    # ---- measured-cost feedback state (DESIGN.md §2.7) ----
+    # refinement generation: 0 = built from a-priori estimates, g+1 = built
+    # by the g-th schedule's refine(); part of the schedule-cache key, so a
+    # refined schedule can never be served a stale lowering
+    generation: int = 0
+    # True when sizes describe a payload layout (CSR nnz / degrees) that
+    # refine() must keep; False when they are quantized cost estimates
+    structural_sizes: bool = True
+    # construction parameters refine() rebuilds with (None width = re-band)
+    width_arg: Optional[int] = None
+    band_eps: float = ICH_EPS
+    # lazily-created CostRefiner lives here (frozen dataclass; same benign
+    # setdefault race as _shards)
+    _feedback: dict = dataclasses.field(default_factory=dict, repr=False)
+    # the constructing facade — refine() re-enters its cache; None for
+    # hand-assembled Schedules (refine then rebuilds directly)
+    _scheduler: Optional["LoopScheduler"] = dataclasses.field(
+        default=None, repr=False)
 
     # ------------------------------------------------------------- lowering
     def lower(self) -> T.TileSchedule:
@@ -129,6 +148,12 @@ class Schedule:
         """Predicted per-tile cost; what `replay` must reproduce."""
         return self.tiles.tile_cost(self.costs, self.sizes)
 
+    def slot_cost(self) -> np.ndarray:
+        """Per-slot (T, R) cost decomposition; rows sum to `tile_cost`.
+        This is the stream the sharded kernels account their per-worker
+        cost output against (`sched/kernels.py`)."""
+        return self.tiles.slot_cost(self.costs, self.sizes)
+
     # ------------------------------------------------------- (a) simulator
     def simulate(self, *, p: Optional[int] = None,
                  policy: Optional[P.Policy] = None,
@@ -171,25 +196,269 @@ class Schedule:
                           params if params is not None else self.sim_params,
                           record_chunks=record_chunks)
 
+    # ------------------------------- measured-cost feedback (DESIGN.md §2.7)
+    @property
+    def refiner(self) -> CostRefiner:
+        """This schedule's cost refiner (created on first use). Carries the
+        per-item Welford statistics across observe() rounds and — through
+        refine() — across schedule generations."""
+        r = self._feedback.get("refiner")
+        if r is None:
+            r = self._feedback.setdefault(
+                "refiner", CostRefiner.for_costs(self.sizes, self.costs))
+        return r
+
+    def observe(self, measured, *, level: str = "auto",
+                space: str = "auto", normalize: Optional[bool] = None,
+                shards: Optional[T.WorkerShards] = None) -> "Schedule":
+        """Fold one execution round's measured costs into the refiner.
+
+        Accepts what each execution layer emits:
+
+        * a `SimResult` with `chunk_log` (from `replay`/`replay_sharded`/
+          `simulate(record_chunks=True)`) — per-chunk dispatched work, in
+          item space (simulate) or flattened work-unit space (replays);
+          inferred from the simulated n, with the same `space=` escape
+          hatch as ExecStats when the two coincide;
+        * an `ExecStats` with `chunk_log` (from `parallel_for(record_chunks
+          =True)` / `parallel_for_units`) — per-chunk wall seconds,
+          normalized onto the estimate scale by default (wall clocks and
+          abstract cost units share no unit). Chunk ranges live in ITEM
+          space (`parallel_for`) or flattened WORK-UNIT space
+          (`parallel_for_units`); this is inferred from where the ranges
+          end, and when n_items == n_units with non-uniform sizes makes
+          the two indistinguishable, `space="items"`/`"units"` must say
+          which executor produced the stats;
+        * a (p, S_B) array — the sharded kernels' per-worker, per-superstep
+          cost output (`sched/kernels.py` ops' `.observe()`). Attributed
+          through the schedule's DEFAULT shard lowering unless `shards`
+          names the lowering the measurement came from — shapes alone
+          cannot identify a lowering (distinct supersteps can share a
+          (p, S_B) grid), so a non-default lowering must be passed
+          explicitly;
+        * a 1-D array — per-item (`level="item"`) or per-tile
+          (`level="tile"`) measurements; "auto" infers from the length and
+          raises when n_items == n_tiles makes it ambiguous.
+
+        Returns self, so a round reads
+        ``schedule.observe(measured).refine()``.
+        """
+        r = self.refiner
+        if isinstance(measured, S.SimResult):
+            if not measured.chunk_log:
+                raise ValueError(
+                    "SimResult carries no chunk_log; run the simulator "
+                    "with record_chunks=True to observe it")
+            ranges = [(b, e) for (b, e, _, _) in measured.chunk_log]
+            work = np.array([wk for (_, _, _, wk) in measured.chunk_log])
+            n_units = int(self.sizes.sum())
+            if space not in ("auto", "items", "units"):
+                raise ValueError(f"space must be 'auto', 'items' or "
+                                 f"'units', got {space!r}")
+            # simulate() runs over per-item costs, replay()/replay_sharded()
+            # over flattened work units; same ambiguity rule as ExecStats
+            # below when the two coincide with non-uniform sizes
+            if space != "auto":
+                unit_space = space == "units"
+                expect = n_units if unit_space else self.n_items
+                if measured.n != expect:
+                    raise ValueError(
+                        f"SimResult ran over n={measured.n} iterations but "
+                        f"the {space} space has {expect} entries")
+            elif measured.n == self.n_items == n_units \
+                    and not (self.sizes == 1).all():
+                raise ValueError(
+                    "n_items == work units with non-uniform sizes: pass "
+                    "space='items' (a simulate() run) or space='units' "
+                    "(a replay)")
+            elif measured.n == self.n_items:
+                unit_space = False
+            elif measured.n == n_units:
+                unit_space = True
+            else:
+                raise ValueError(
+                    f"SimResult over n={measured.n} iterations matches "
+                    f"neither items ({self.n_items}) nor work units "
+                    f"({n_units}) of this schedule")
+            if unit_space:
+                r.observe_unit_ranges(ranges, work)
+            else:
+                r.observe_item_ranges(ranges, work)
+            return self
+        if isinstance(measured, E.ExecStats):
+            if not measured.chunk_log:
+                raise ValueError(
+                    "ExecStats carries no chunk_log; run parallel_for with "
+                    "record_chunks=True to observe it")
+            ranges = np.array([(b, e) for (b, e, _, _) in measured.chunk_log],
+                              np.int64)
+            secs = np.array([dt for (_, _, _, dt) in measured.chunk_log])
+            n_units = int(self.sizes.sum())
+            end = int(ranges[:, 1].max(initial=0))
+            if space not in ("auto", "items", "units"):
+                raise ValueError(f"space must be 'auto', 'items' or "
+                                 f"'units', got {space!r}")
+            # parallel_for chunks cover [0, n_items), parallel_for_units
+            # [0, n_units); when the two coincide AND sizes are non-
+            # uniform, the spaces distribute differently and the caller
+            # must say which executor produced the stats
+            if space != "auto":
+                unit_space = space == "units"
+                expect = n_units if unit_space else self.n_items
+                if end != expect:
+                    raise ValueError(
+                        f"ExecStats chunks end at {end} but the "
+                        f"{space} space has {expect} entries")
+            elif end == self.n_items == n_units \
+                    and not (self.sizes == 1).all():
+                raise ValueError(
+                    "n_items == work units with non-uniform sizes: pass "
+                    "space='items' (parallel_for stats) or space='units' "
+                    "(parallel_for_units stats)")
+            elif end == self.n_items:
+                unit_space = False
+            elif end == n_units:
+                unit_space = True
+            else:
+                raise ValueError(
+                    f"ExecStats chunks end at {end}, matching neither "
+                    f"items ({self.n_items}) nor work units ({n_units})")
+            if normalize is None:
+                normalize = True  # wall seconds -> estimate scale
+            if normalize and secs.sum() > 0:
+                if unit_space:
+                    unit_est = self.unit_costs()
+                    covered = sum(float(unit_est[b:e].sum())
+                                  for b, e in ranges)
+                else:
+                    covered = sum(float(r.est[b:e].sum()) for b, e in ranges)
+                if covered > 0:
+                    secs = secs * (covered / secs.sum())
+            if unit_space:
+                r.observe_unit_ranges(ranges, secs)
+            else:
+                r.observe_item_ranges(ranges, secs)
+            return self
+        arr = np.asarray(measured, np.float64)
+        if arr.ndim == 2:
+            sh = shards if shards is not None else self.shard()
+            if sh.block_perm.shape != arr.shape:
+                raise ValueError(
+                    f"worker-step observation {arr.shape} does not match "
+                    f"the {'given' if shards is not None else 'default'} "
+                    f"shard lowering's (p, S_B) grid "
+                    f"{sh.block_perm.shape}; pass shards=<the lowering the "
+                    "measurement came from> (shapes alone cannot identify "
+                    "a lowering)")
+            r.observe_worker_steps(self.tiles, sh, arr)
+            return self
+        if arr.ndim != 1:
+            raise ValueError(f"cannot interpret a {arr.ndim}-D observation")
+        if level == "auto":
+            if arr.size == self.n_items == self.n_tiles:
+                raise ValueError(
+                    "n_items == n_tiles: pass level='item' or level='tile'")
+            level = ("item" if arr.size == self.n_items else
+                     "tile" if arr.size == self.n_tiles else None)
+            if level is None:
+                raise ValueError(
+                    f"observation of length {arr.size} matches neither "
+                    f"items ({self.n_items}) nor tiles ({self.n_tiles})")
+        if level == "item":
+            r.observe_items(arr)
+        elif level == "tile":
+            r.observe_tiles(self.tiles, arr)
+        else:
+            raise ValueError(f"unknown observation level {level!r}")
+        return self
+
+    def refine(self, *, blend: Optional[float] = None) -> "Schedule":
+        """Re-construct from the refiner's current refined costs: re-tile
+        (unless sizes are structural), re-partition, and re-shard, under a
+        fresh cache GENERATION so no stale lowering (tiles, shard layouts,
+        packed payloads) is ever reused. The refiner — with all its
+        accumulated per-item statistics — transfers to the new schedule, so
+        rounds keep compounding: ``s = s.observe(m).refine()``.
+        """
+        r = self.refiner
+        if blend is not None:
+            r.blend = float(blend)
+        refined = r.refresh_estimates()
+        provider = RefinedCosts(self.sizes, refined,
+                                generation=self.generation + 1,
+                                structural=self.structural_sizes)
+        if self._scheduler is not None:
+            new = self._scheduler.schedule(
+                provider, policy=self.policy, p=self.p,
+                rows_per_tile=self.rows_per_tile, width=self.width_arg,
+                eps=self.band_eps, superstep=self.superstep,
+                _generation=self.generation + 1)
+        else:  # hand-assembled schedule: rebuild directly, no cache
+            tiles = T.build_schedule(provider.sizes(),
+                                     rows_per_tile=self.rows_per_tile,
+                                     width=self.width_arg, eps=self.band_eps)
+            new = dataclasses.replace(
+                self, sizes=provider.sizes(), costs=provider.costs(),
+                tiles=tiles, generation=self.generation + 1,
+                _shards={}, _feedback={})
+        new._feedback["refiner"] = r.successor(new.sizes)
+        return new
+
+    def replay_refined(self, true_costs, *, sharded: bool = False,
+                       p: Optional[int] = None,
+                       superstep: Optional[int] = None,
+                       params: Optional[S.SimParams] = None,
+                       record_chunks: bool = False) -> S.SimResult:
+        """Deterministically answer "what does THIS schedule cost on that
+        workload": replay the constructed chunks with per-item costs
+        `true_costs` (measured or ground truth) instead of the estimates
+        the schedule was built from — `simulator.replay_refined` over the
+        tile ranges, through the central pretiled queue, or as the static
+        sharded assignment when `sharded=True`. The observe/refine loop
+        must drive this makespan down (tests/test_adaptive_properties.py,
+        benchmarks/bench_schedule_build.py)."""
+        true_costs = np.asarray(true_costs, np.float64)
+        if true_costs.shape != (self.n_items,):
+            raise ValueError(f"true costs must have shape "
+                             f"({self.n_items},), got {true_costs.shape}")
+        unit = self.tiles.unit_costs(true_costs, self.sizes)
+        prm = params if params is not None else self.sim_params
+        if sharded:
+            shards = self.shard(p=p, superstep=superstep)
+            return S.replay_refined(unit, self.unit_ranges(), shards.p,
+                                    workers=shards.worker, params=prm,
+                                    record_chunks=record_chunks)
+        return S.replay_refined(unit, self.unit_ranges(), p or self.p,
+                                params=prm, record_chunks=record_chunks)
+
     # -------------------------------------------------------- (b) executor
     def parallel_for(self, body: Callable[[int], None], *,
                      p: Optional[int] = None,
                      policy: Optional[P.Policy] = None,
-                     seed: int = 0) -> E.ExecStats:
+                     seed: int = 0, record_chunks: bool = False,
+                     deterministic: bool = False) -> E.ExecStats:
         """Run `body(i)` for every item on real threads under `policy`
-        (default: the schedule's)."""
+        (default: the schedule's). `record_chunks=True` fills the per-chunk
+        wall-time log `observe()` consumes (DESIGN.md §2.7)."""
         return E.parallel_for(self.n_items, body, p or self.p,
-                              policy or self.policy, seed=seed)
+                              policy or self.policy, seed=seed,
+                              record_chunks=record_chunks,
+                              deterministic=deterministic)
 
     def parallel_for_units(self, body: Callable[[int], None], *,
                            p: Optional[int] = None,
-                           seed: int = 0) -> E.ExecStats:
+                           seed: int = 0, record_chunks: bool = False,
+                           deterministic: bool = False) -> E.ExecStats:
         """Run `body(u)` for every flattened work unit on real threads,
         dispatched in exactly the constructed tile chunks (one central-queue
-        chunk per tile — the threaded twin of `replay`)."""
+        chunk per tile — the threaded twin of `replay`). With
+        `record_chunks=True` the returned stats carry one wall-time record
+        per tile, ready for `observe()`."""
         n_units = int(self.sizes.sum())
         return E.parallel_for(n_units, body, p or self.p,
-                              P.pretiled(self.unit_ranges()), seed=seed)
+                              P.pretiled(self.unit_ranges()), seed=seed,
+                              record_chunks=record_chunks,
+                              deterministic=deterministic)
 
 
 class LoopScheduler:
@@ -230,7 +499,8 @@ class LoopScheduler:
                  rows_per_tile: Optional[int] = None,
                  width: Optional[int] = None,
                  eps: Optional[float] = None,
-                 superstep: Optional[int] = None) -> Schedule:
+                 superstep: Optional[int] = None,
+                 _generation: int = 0) -> Schedule:
         """Construct (or fetch from cache) the schedule for `costs`.
 
         `costs` is a `CostProvider` or a bare per-item array
@@ -244,7 +514,10 @@ class LoopScheduler:
         so entries differing only in those must be distinct objects — a
         p=2 schedule's memoized shards and packed kernels must never be
         served to a p=4 caller (tests/test_sched_api.py proves distinct
-        p values don't collide).
+        p values don't collide). It also includes the refinement
+        GENERATION (`_generation`, set by `Schedule.refine`): a refined
+        schedule's lowerings are always freshly keyed, never a stale
+        entry's (sched/cache.py).
         """
         provider = as_cost_provider(costs)
         pol = policy if policy is not None else self.policy
@@ -254,12 +527,16 @@ class LoopScheduler:
         band_eps = float(eps if eps is not None
                          else (pol.eps if pol.adaptive else ICH_EPS))
         sstep = int(superstep if superstep is not None else self.superstep)
+        gen = int(_generation)
+        # absent a declaration, sizes count as structural: keeping them
+        # across refinement is always payload-safe (see sched/costs.py)
+        structural = bool(getattr(provider, "sizes_are_structural", True))
         # the policy keys as the full (frozen, hashable) dataclass, not just
         # label(): labels are lossy — taskloop's drops num_tasks, pretiled's
         # drops the actual ranges — and would alias distinct policies onto
         # one cache entry
         key = (provider.fingerprint(), pol, pp, rpt, width,
-               band_eps, self.min_w, self.max_w, sstep)
+               band_eps, self.min_w, self.max_w, sstep, gen)
 
         def build() -> Schedule:
             sizes = provider.sizes()
@@ -268,7 +545,9 @@ class LoopScheduler:
                                      max_w=self.max_w)
             return Schedule(sizes=sizes, costs=provider.costs(), policy=pol,
                             p=pp, tiles=tiles, sim_params=self.sim_params,
-                            superstep=sstep)
+                            superstep=sstep, generation=gen,
+                            structural_sizes=structural, width_arg=width,
+                            band_eps=band_eps, _scheduler=self)
 
         if self.cache is None:
             return build()

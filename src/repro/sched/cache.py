@@ -15,6 +15,19 @@ A repeat `LoopScheduler.schedule()` call returns the previously built
 (`benchmarks/bench_schedule_build.py` records the hit path in
 `BENCH_schedule.json`).
 
+Generation invalidation (measured-cost feedback, DESIGN.md §2.7): the key
+also carries the refinement GENERATION. `Schedule.refine()` re-enters
+this cache with generation g+1 and a `RefinedCosts` fingerprint over the
+refreshed (sizes, costs) content, so a refined schedule — and everything
+hanging off it: memoized shard layouts, packed kernel payloads — is
+always a fresh entry; a stale generation-g lowering can never be served
+for generation-g+1 costs, even if an unrelated entry hashed equal on the
+non-generation fields. Old generations age out through normal LRU
+eviction rather than eager invalidation: in a serving loop the previous
+generation often still has in-flight consumers, and evicting it early
+would only force rebuilds (`tests/test_adaptive_properties.py` pins the
+no-aliasing rule).
+
 Thread-safe; eviction is least-recently-used. Construction runs outside
 the cache lock (it serializes internally on the tiling workspace), so a
 slow build never blocks concurrent hits. Two threads racing on the same

@@ -39,6 +39,14 @@ class CostProvider(Protocol):
         """Stable content hash; equal inputs must produce equal values."""
         ...
 
+    # NOTE: providers may additionally expose `sizes_are_structural`
+    # (bool). True means sizes() describes a payload layout (CSR row nnz,
+    # adjacency degrees) that measured-cost refinement must NOT re-derive
+    # from refreshed costs; False means sizes are merely quantized cost
+    # estimates and refinement may re-tile from scratch. Absent, the
+    # facade assumes True (the conservative choice: a kept size array is
+    # always payload-safe). See `sched/adaptive.py` / `Schedule.refine`.
+
 
 def _digest(*arrays: np.ndarray) -> str:
     h = hashlib.blake2b(digest_size=16)
@@ -82,6 +90,7 @@ class ExplicitCosts:
         self._values = values
         self._sizes = None
         self._costs = None
+        self._structural = np.issubdtype(values.dtype, np.integer)
         self._fp = f"explicit:{_digest(values)}"
 
     def _materialize(self) -> None:
@@ -109,6 +118,12 @@ class ExplicitCosts:
 
     def fingerprint(self) -> str:
         return self._fp
+
+    @property
+    def sizes_are_structural(self) -> bool:
+        """Integer inputs ARE the work units (keep them across refinement);
+        float inputs only quantize to units (refinement may re-derive)."""
+        return bool(self._structural)
 
 
 class NnzCosts:
@@ -141,6 +156,11 @@ class NnzCosts:
     def fingerprint(self) -> str:
         return self._fp
 
+    @property
+    def sizes_are_structural(self) -> bool:
+        """Row lengths ARE the CSR payload layout; refinement keeps them."""
+        return True
+
 
 class DegreeCosts(NnzCosts):
     """Per-vertex degree of a CSR graph (row u = u's neighbor list): the
@@ -148,6 +168,51 @@ class DegreeCosts(NnzCosts):
     registry entries and fingerprints name the workload they describe."""
 
     _kind = "degree"
+
+
+class RefinedCosts:
+    """Measured-cost refinement output: refreshed per-item costs, with the
+    work-unit sizes either KEPT from the parent schedule (structural —
+    payload layouts must not drift) or re-derived by quantization
+    (estimate-only sizes). Carries the refinement `generation` in its
+    fingerprint so a refined schedule can never alias a stale cache entry
+    (`Schedule.refine`, sched/cache.py).
+    """
+
+    def __init__(self, sizes: np.ndarray, costs: np.ndarray, *,
+                 generation: int, structural: bool):
+        costs = np.asarray(costs, np.float64)
+        if costs.ndim != 1:
+            raise ValueError(f"per-item costs must be 1-D, got {costs.shape}")
+        self._costs = costs.copy()
+        self._structural = bool(structural)
+        self._gen = int(generation)
+        if self._structural:
+            sizes = np.asarray(sizes, np.int64)
+            if sizes.shape != costs.shape:
+                raise ValueError(f"sizes {sizes.shape} != costs {costs.shape}")
+            self._sizes = sizes.copy()
+        else:
+            self._sizes = quantize_costs(self._costs)
+        self._fp = (f"refined:g{self._gen}:"
+                    f"{_digest(self._sizes, self._costs)}")
+
+    def sizes(self) -> np.ndarray:
+        return self._sizes
+
+    def costs(self) -> np.ndarray:
+        return self._costs
+
+    def fingerprint(self) -> str:
+        return self._fp
+
+    @property
+    def sizes_are_structural(self) -> bool:
+        return self._structural
+
+    @property
+    def generation(self) -> int:
+        return self._gen
 
 
 def as_cost_provider(costs) -> CostProvider:

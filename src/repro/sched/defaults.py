@@ -29,3 +29,15 @@ MAX_WIDTH = 512
 # kernel processes B tiles at once (a (B*R, W) payload block), amortizing
 # the per-step dispatch/prefetch overhead over B tiles (DESIGN.md §2.6).
 SUPERSTEP = 8
+
+# Measured-cost feedback (DESIGN.md §2.7). REFINE_BLEND is the weight of
+# the observed running mean against the a-priori estimate once an item has
+# been observed at least once: 1.0 trusts measurements fully (the paper's
+# posture — iCh's whole premise is that the runtime signal beats the
+# estimate), lower values damp noisy single observations. Items never
+# observed always keep their prior.
+REFINE_BLEND = 1.0
+
+# Rounds the refine-loop demo/benchmark runs (observe -> refine cycles on
+# the jittered workload in benchmarks/bench_schedule_build.py).
+REFINE_ROUNDS = 3

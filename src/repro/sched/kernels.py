@@ -16,6 +16,15 @@ layout moves no payload bytes. Outputs are bit-identical to the
 sequential (T,)-grid kernels (tests/test_sharding.py), which remain
 available in the kernel modules as the cross-check path.
 
+Measured-cost feedback (DESIGN.md §2.7): every op passes the schedule's
+per-slot cost stream into the sharded kernel, which emits a per-worker,
+per-superstep cost output alongside its payload result. The op stashes the
+latest stream as `last_costs`; calling `op.observe()` folds it back into
+the schedule's `CostRefiner`, after which `op.schedule.refine()` re-lowers
+under a fresh cache generation. Per-worker sums of the emitted stream
+equal the schedule's tile-cost totals exactly — the routing proof in
+tests/test_adaptive_properties.py.
+
 jax is imported inside the op constructors: deriving costs and constructing
 schedules is numpy-only, and the registry must be listable without paying
 the jax import.
@@ -33,6 +42,43 @@ from .costs import DegreeCosts, ExplicitCosts, NnzCosts
 from .registry import register
 
 
+def _flat_slot_cost(schedule: Schedule, n_tiles_padded: int) -> np.ndarray:
+    """The (T_pad, R) float32 per-slot scheduled-cost stream the sharded
+    SpMV/BFS kernels fetch blockwise (pad tiles carry zeros)."""
+    sc = np.zeros((n_tiles_padded, schedule.rows_per_tile), np.float32)
+    sc[:schedule.n_tiles] = schedule.slot_cost()
+    return sc
+
+
+def _sharded_slot_cost(schedule: Schedule, shards) -> np.ndarray:
+    """The (p*S, R) per-slot cost stream in SHARD layout for kernels with
+    no flat-payload indirection (K-Means); padding rows are zero."""
+    flat = shards.perm.reshape(-1)
+    sc = schedule.slot_cost()
+    out = np.where((flat >= 0)[:, None], sc[np.clip(flat, 0, None)], 0.0)
+    return np.ascontiguousarray(out, np.float32)
+
+
+class _ObservableOp:
+    """Shared feedback plumbing: stash the kernel's latest cost stream and
+    route it into the schedule's refiner on demand."""
+
+    schedule: Schedule
+    last_costs = None  # (p, S_B) device array from the latest invocation
+
+    def observe(self) -> Schedule:
+        """Fold the latest invocation's per-worker, per-superstep cost
+        stream into `schedule.refiner`; chain with
+        ``op.observe().refine()`` to re-lower from it. The op names its
+        own shard lowering explicitly — a (p, S_B) shape alone cannot
+        identify one."""
+        if self.last_costs is None:
+            raise ValueError("no kernel invocation to observe yet; run the "
+                             "op first")
+        return self.schedule.observe(np.asarray(self.last_costs),
+                                     shards=self.shards)
+
+
 def _default_interpret(interpret):
     if interpret is None:
         import jax
@@ -40,14 +86,14 @@ def _default_interpret(interpret):
     return interpret
 
 
-class SpmvOp:
+class SpmvOp(_ObservableOp):
     """iCh-scheduled segmented CSR SpMV: pack once, apply many times."""
 
     def __init__(self, schedule: Schedule, indptr, indices, data):
         import jax.numpy as jnp
         self.schedule = schedule
         self.n_rows = len(indptr) - 1
-        shards = schedule.shard()
+        shards = self.shards = schedule.shard()
         vals, cols = pack_csr(np.asarray(indptr), np.asarray(indices),
                               np.asarray(data), schedule.tiles,
                               pad_tiles_to=shards.superstep)
@@ -58,6 +104,9 @@ class SpmvOp:
         self.cols = jnp.asarray(cols)
         self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
         self.blkid = jnp.asarray(shards.kernel_block_ids())
+        self.slot_cost = jnp.asarray(
+            _flat_slot_cost(schedule, shards.n_tiles_padded))
+        self.last_costs = None
         self._jitted = {}  # interpret mode -> jitted spmv (compile once)
 
     def __call__(self, x, interpret: bool | None = None):
@@ -68,18 +117,20 @@ class SpmvOp:
             self._jitted[interpret] = jax.jit(functools.partial(
                 ich_spmv_sharded, n_rows=self.n_rows, p=self.p,
                 superstep=self.superstep, interpret=interpret))
-        return self._jitted[interpret](self.vals, self.cols, self.rowid,
-                                       self.blkid, x)
+        y, self.last_costs = self._jitted[interpret](
+            self.vals, self.cols, self.rowid, self.blkid, x,
+            slot_cost=self.slot_cost)
+        return y
 
 
-class BfsOp:
+class BfsOp(_ObservableOp):
     """iCh-scheduled BFS: pack the graph once, expand frontiers many times."""
 
     def __init__(self, schedule: Schedule, indptr, indices):
         import jax.numpy as jnp
         self.schedule = schedule
         self.n = len(indptr) - 1
-        shards = schedule.shard()
+        shards = self.shards = schedule.shard()
         mask, cols = pack_csr(np.asarray(indptr), np.asarray(indices),
                               np.ones(len(indices), np.float32),
                               schedule.tiles,
@@ -90,6 +141,9 @@ class BfsOp:
         self.cols = jnp.asarray(cols)
         self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
         self.blkid = jnp.asarray(shards.kernel_block_ids())
+        self.slot_cost = jnp.asarray(
+            _flat_slot_cost(schedule, shards.n_tiles_padded))
+        self.last_costs = None
         self._jitted = {}  # interpret mode -> jitted step (compile once)
 
     def step(self, frontier, visited, interpret: bool | None = None):
@@ -102,10 +156,11 @@ class BfsOp:
             self._jitted[interpret] = jax.jit(functools.partial(
                 ich_bfs_step_sharded, n_vertices=self.n, p=self.p,
                 superstep=self.superstep, interpret=interpret))
-        return self._jitted[interpret](self.mask, self.cols, self.rowid,
-                                       self.blkid,
-                                       jnp.asarray(frontier, jnp.float32),
-                                       jnp.asarray(visited, jnp.float32))
+        nxt, self.last_costs = self._jitted[interpret](
+            self.mask, self.cols, self.rowid, self.blkid,
+            jnp.asarray(frontier, jnp.float32),
+            jnp.asarray(visited, jnp.float32), slot_cost=self.slot_cost)
+        return nxt
 
     def levels(self, source: int = 0,
                interpret: bool | None = None) -> np.ndarray:
@@ -125,7 +180,7 @@ class BfsOp:
         return level
 
 
-class KMeansOp:
+class KMeansOp(_ObservableOp):
     """iCh-scheduled K-Means assignment over a predicted per-point cost."""
 
     def __init__(self, schedule: Schedule, costs):
@@ -133,10 +188,12 @@ class KMeansOp:
         self.schedule = schedule
         self.sizes = schedule.sizes
         self.n = schedule.n_items
-        shards = schedule.shard()
+        shards = self.shards = schedule.shard()
         self.p = shards.p
         self.superstep = shards.superstep
         self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
+        self.slot_cost = jnp.asarray(_sharded_slot_cost(schedule, shards))
+        self.last_costs = None
         self._jitted = {}  # interpret mode -> jitted assign (compile once)
 
     def __call__(self, points, centroids, interpret: bool | None = None):
@@ -149,9 +206,11 @@ class KMeansOp:
             self._jitted[interpret] = jax.jit(functools.partial(
                 ich_kmeans_assign_sharded, p=self.p,
                 superstep=self.superstep, interpret=interpret))
-        return self._jitted[interpret](jnp.asarray(points, jnp.float32),
-                                       jnp.asarray(centroids, jnp.float32),
-                                       self.rowid)
+        assign, self.last_costs = self._jitted[interpret](
+            jnp.asarray(points, jnp.float32),
+            jnp.asarray(centroids, jnp.float32), self.rowid,
+            slot_cost=self.slot_cost)
+        return assign
 
 
 register(

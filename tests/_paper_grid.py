@@ -1,0 +1,141 @@
+"""Shared machinery for the paper-conformance suite (tests/test_paper_claims
+.py): the Table-2 policy grid evaluated per workload family, with the
+paper's eq.-9 speedup definition and its top-3 / gap-to-best claims.
+
+Self-contained over `repro.core` (mirrors benchmarks/common.py rather than
+importing it, so the tests run under any pytest invocation, not only
+`python -m pytest` from the repo root).
+
+Families come in two scales:
+
+* ``smoke`` — small n, runs inside tier-1 on every push. Two deliberate
+  adaptations keep the reduced scale faithful to paper conditions rather
+  than to reduction artifacts (see test_paper_claims.py for the full
+  rationale): scale-free BFS runs at p=8, and the SpMV matrices are the
+  moderate-skew Table-1 entries.
+* ``paper`` — paper-scale n, behind the `paper` marker + PAPER_SUITE=1
+  (the non-blocking CI job). Also evaluates the extreme-hub matrices,
+  REPORTED in the CSV digest but not asserted.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import policies as P
+from repro.core import workloads as WL
+from repro.core.simulator import SimParams, simulate
+
+PARAMS = SimParams()
+METHODS = ("guided", "dynamic", "taskloop", "binlpt", "stealing", "ich")
+
+# Methods within 5% relative speedup count as tied when ranking. The
+# paper's own headline resolution is "within 5.4% of the best method";
+# at reduced simulation scale, orderings inside that band flip with the
+# RNG seed and say nothing about the methods (road_usa's binlpt-vs-iCh
+# 4.6% margin is the canonical example).
+TIE_TOL = 0.05
+
+
+def app_time(loops, p, pol, estimates=None, params=PARAMS):
+    """Sum of per-loop makespans under one policy (fork-join barriers)."""
+    total = 0.0
+    for i, costs in enumerate(loops):
+        est = estimates[i] if estimates is not None else None
+        total += simulate(np.asarray(costs, np.float64), p, pol, params,
+                          estimate=est).makespan
+    return total
+
+
+def best_time(loops, p, method, estimates=None, params=PARAMS):
+    """T(app, method, p): best over the method's Table-2 parameter grid."""
+    return min(app_time(loops, p, pol, estimates, params)
+               for pol in P.paper_policy_grid(p) if pol.name == method)
+
+
+def speedup_table(loops, p, estimates=None, params=PARAMS):
+    """{method: speedup at p}, eq. 9: T(guided, 1) / T(method, p)."""
+    t1 = best_time(loops, 1, "guided", estimates, params)
+    return {m: t1 / best_time(loops, p, m, estimates, params)
+            for m in METHODS}
+
+
+def rank_of_ich(table: dict, tol: float = TIE_TOL) -> int:
+    """1-based rank of iCh among the methods (ties within tol)."""
+    ich = table["ich"]
+    return 1 + sum(1 for m, v in table.items()
+                   if m != "ich" and v > ich * (1 + tol))
+
+
+def gap_to_best(table: dict) -> float:
+    """(best - ich) / best — the paper reports 5.4% on average."""
+    best = max(table.values())
+    return (best - table["ich"]) / best
+
+
+# ---------------------------------------------------------------------------
+# Workload families (paper §5.1). Each entry: name -> (loops, estimates, p).
+# `estimates` is what workload-aware methods (binlpt) are handed — the
+# static degree estimate for BFS, the stale round-0 costs for K-Means.
+# ---------------------------------------------------------------------------
+
+# Table-1 matrices whose (mean, ratio, variance) stay faithfully simulable
+# at reduced row counts; the extreme-hub entries (FullChip, wikipedia,
+# arabic-2005, uk-2005, wb-edu) synthesize a contiguous hub block holding
+# tens of percent of ALL work at small n — an artifact of stat-matching a
+# 5M-row matrix into 1e4 rows — and are reported, not asserted.
+MODERATE_SPMV = ("circuit5M_dc", "delaunay_n23", "road_usa", "kmer_P1a",
+                 "nlpkkt240")
+HUB_SPMV = ("FullChip", "wikipedia", "arabic-2005", "uk-2005", "wb-edu")
+
+SMOKE = {"synth": 4_000, "bfs": 3_000, "kmeans": 3_000, "spmv": 4_000,
+         "kmeans_rounds": 3}
+PAPER = {"synth": 50_000, "bfs": 20_000, "kmeans": 30_000, "spmv": 50_000,
+         "kmeans_rounds": 6}
+
+
+def _spec(name: str) -> WL.MatrixSpec:
+    return next(s for s in WL.TABLE1 if s.name == name)
+
+
+def families(scale: dict, spmv_names=MODERATE_SPMV) -> dict:
+    """name -> (loops, estimates, p) for every asserted workload family."""
+    fams = {}
+    n = scale["synth"]
+    fams["synth/linear"] = ([WL.synth_linear(n)], None, 28)
+    fams["synth/exp_inc"] = ([WL.synth_exp(n, True)], None, 28)
+    fams["synth/exp_dec"] = ([WL.synth_exp(n, False)], None, 28)
+    lv, est = WL.bfs_levels("uniform", scale["bfs"])
+    fams["bfs/uniform"] = (lv, [est] * len(lv), 28)
+    # Reduced-scale adaptation: the clipped-zipf generator at small n puts
+    # a paper-impossible fraction of all edges on a handful of vertices
+    # (single iterations no stealing can split), so the paper's 28-thread
+    # point is evaluated at p=8 where work-per-thread matches paper ratios.
+    lv, est = WL.bfs_levels("scale_free", scale["bfs"])
+    fams["bfs/scale_free"] = (lv, [est] * len(lv), 8)
+    loops, est0 = WL.kmeans_rounds(scale["kmeans"], scale["kmeans_rounds"])
+    fams["kmeans"] = (loops, [est0] * len(loops), 28)
+    for name in spmv_names:
+        fams[f"spmv/{name}"] = ([WL.spmv_costs(_spec(name), scale["spmv"])],
+                                None, 28)
+    return fams
+
+
+def evaluate(fams: dict) -> dict:
+    """name -> {"table": {method: speedup}, "rank": int, "gap": float}."""
+    out = {}
+    for name, (loops, ests, p) in fams.items():
+        table = speedup_table(loops, p, ests)
+        out[name] = {"table": table, "p": p, "rank": rank_of_ich(table),
+                     "gap": gap_to_best(table)}
+    return out
+
+
+def digest_rows(results: dict, asserted: set) -> list[str]:
+    """CSV rows (family,p,method,speedup / family,p,rank,gap,asserted)."""
+    rows = []
+    for name, r in sorted(results.items()):
+        for m, v in r["table"].items():
+            rows.append(f"{name},{r['p']},{m},{v:.4f}")
+        rows.append(f"{name},{r['p']},rank,{r['rank']},"
+                    f"gap,{r['gap']:.4f},asserted,{name in asserted}")
+    return rows

@@ -6,6 +6,7 @@ import warnings
 
 import numpy as np
 import pytest
+from conftest import random_csr as _random_csr
 
 from repro import sched
 from repro.core import policies as P
@@ -14,17 +15,6 @@ from repro.sched.api import LoopScheduler, Schedule
 from repro.sched.costs import (DegreeCosts, ExplicitCosts, NnzCosts,
                                as_cost_provider, quantize_costs)
 from repro.sched.registry import register, unregister
-
-
-def _random_csr(n, zipf_a=1.8, seed=0, max_nnz=60):
-    rng = np.random.default_rng(seed)
-    row_nnz = np.minimum(rng.zipf(zipf_a, n), max_nnz).astype(np.int64)
-    row_nnz[rng.random(n) < 0.1] = 0  # empty rows, the hard case
-    indptr = np.concatenate([[0], np.cumsum(row_nnz)]).astype(np.int64)
-    nnz = int(indptr[-1])
-    indices = rng.integers(0, n, nnz).astype(np.int32)
-    data = rng.standard_normal(nnz).astype(np.float32)
-    return indptr, indices, data
 
 
 # ------------------------------------------------------------ cost providers

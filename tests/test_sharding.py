@@ -7,6 +7,7 @@ workloads."""
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
+from conftest import random_csr as _random_csr
 
 from repro.core import policies as P
 from repro.core import tiling as T
@@ -19,17 +20,6 @@ _NO_OVERHEAD = SimParams(dispatch_overhead=0.0, local_dispatch_overhead=0.0,
 _SIZES = st.lists(st.one_of(st.just(0), st.integers(0, 40),
                             st.integers(200, 3000)),
                   min_size=1, max_size=120)
-
-
-def _random_csr(n, zipf_a=1.8, seed=0, max_nnz=60):
-    rng = np.random.default_rng(seed)
-    row_nnz = np.minimum(rng.zipf(zipf_a, n), max_nnz).astype(np.int64)
-    row_nnz[rng.random(n) < 0.1] = 0
-    indptr = np.concatenate([[0], np.cumsum(row_nnz)]).astype(np.int64)
-    nnz = int(indptr[-1])
-    indices = rng.integers(0, n, nnz).astype(np.int32)
-    data = rng.standard_normal(nnz).astype(np.float32)
-    return indptr, indices, data
 
 
 # ------------------------------------------------------------ partitioning
@@ -309,6 +299,72 @@ def test_registry_ops_run_sharded_and_match_refs():
     bfs = scheduler.build("bfs", indptr, indices)
     np.testing.assert_array_equal(bfs.levels(0, interpret=True),
                                   bfs_levels_ref(indptr, indices, 0))
+
+
+# --------------------------------------------------- degenerate lowerings
+def _bit_identity_spmv(s, indptr, indices, data, p, B):
+    """Sequential-grid vs sharded-grid SpMV on schedule `s` at (p, B)."""
+    import jax.numpy as jnp
+    from repro.kernels.ich_spmv.ich_spmv import ich_spmv, ich_spmv_sharded
+
+    n = len(indptr) - 1
+    rng = np.random.default_rng(p * 31 + B)
+    x = rng.standard_normal(n).astype(np.float32)
+    vals, cols = T.pack_csr(indptr, indices, data, s.tiles)
+    y_seq = np.asarray(ich_spmv(jnp.asarray(vals), jnp.asarray(cols),
+                                jnp.asarray(s.item_id), jnp.asarray(x), n,
+                                interpret=True))
+    shards = s.shard(p=p, superstep=B)
+    vp, cp = T.pack_csr(indptr, indices, data, s.tiles, pad_tiles_to=B)
+    y_sh = np.asarray(ich_spmv_sharded(
+        jnp.asarray(vp), jnp.asarray(cp),
+        jnp.asarray(shards.shard_item_id(s.tiles)),
+        jnp.asarray(shards.kernel_block_ids()), jnp.asarray(x), n, p, B,
+        interpret=True))
+    np.testing.assert_array_equal(y_sh, y_seq)
+    return shards
+
+
+@pytest.mark.parametrize("case", ["p_exceeds_blocks", "superstep_exceeds_T",
+                                  "p_one"])
+def test_shard_degenerate_lowerings_bit_identical(case):
+    """The degenerate shard shapes — more workers than superstep blocks
+    (idle workers), a superstep larger than the whole tile axis (one
+    block, p-1 idle workers), and p=1 (everything on one worker) — must
+    all produce valid layouts, agree with the simulator's static replay,
+    and stay bit-identical to the sequential grid."""
+    n = 40
+    indptr, indices, data = _random_csr(n, seed=13)
+    s = LoopScheduler(cache_size=0).schedule(np.diff(indptr),
+                                             rows_per_tile=4)
+    Tn = s.n_tiles
+    p, B = {"p_exceeds_blocks": (max(Tn, 3) + 2, 2),
+            "superstep_exceeds_T": (3, Tn + 5),
+            "p_one": (1, 4)}[case]
+    shards = _bit_identity_spmv(s, indptr, indices, data, p, B)
+    assert shards.p == p and shards.superstep == B
+    n_blocks = -(-Tn // B)
+    # every block placed exactly once; idle workers hold only -1 padding
+    bp = shards.block_perm
+    np.testing.assert_array_equal(np.sort(bp[bp >= 0]), np.arange(n_blocks))
+    idle = ~(bp >= 0).any(axis=1)
+    assert idle.sum() == max(0, p - len(np.unique(shards.worker)))
+    # simulator static replay: per-worker dispatched work == partition cost
+    wc = shards.worker_cost(s.tile_cost())
+    assert wc.shape == (p,)
+    assert (wc[idle] == 0).all()
+    rep = s.replay_sharded(p=p, superstep=B, params=_NO_OVERHEAD)
+    sim_wc = np.zeros(p)
+    for (b, e, w, work) in rep.chunk_log:
+        sim_wc[w] += work
+    np.testing.assert_allclose(sim_wc, wc, atol=1e-9)
+    np.testing.assert_allclose(rep.makespan, wc.max(), atol=1e-9)
+    if case == "p_one":
+        # p=1 static assignment degenerates to the sequential tile order
+        np.testing.assert_array_equal(shards.worker, np.zeros(Tn, np.int32))
+        np.testing.assert_array_equal(
+            np.array([(b, e) for (b, e, _, _) in rep.chunk_log]),
+            s.unit_ranges())
 
 
 def test_shard_memoized_per_p_and_superstep():
