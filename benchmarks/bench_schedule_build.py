@@ -20,6 +20,11 @@ Measures, across item counts (default 10k / 100k / 1M):
     grid AND the worker-sharded superstepped 2D grid at p in {1, 4} —
     sharded outputs are asserted bit-identical to the sequential grid, so
     this section doubles as the CI sharded-kernel smoke;
+  * MoE expert dispatch on the scheduler (DESIGN.md §2.8) at the smallest
+    size: the sort-based dispatch resolution alone vs the full scheduled
+    build (plan + schedule + shard + pack), and the closed capacity loop —
+    the sharded-replay TRUE-cost imbalance is asserted non-increasing
+    across three `refine_cap_scale` rounds;
   * the measured-cost refine loop (DESIGN.md §2.7) at the smallest size:
     a jittered workload is scheduled from a-priori estimates, per-tile
     true costs are observed from a sharded replay, and
@@ -233,6 +238,91 @@ def bench_refine_loop(n: int, p: int = 8, rounds: int = None,
     }
 
 
+def bench_moe_dispatch(n_tokens: int, repeats: int, n_experts: int = 512,
+                       k: int = 2, p: int = 8, rounds: int = 3,
+                       seed: int = 7) -> dict:
+    """MoE expert dispatch on the scheduler (DESIGN.md §2.8).
+
+    Two measurements over a zipf-skewed router at n_tokens:
+
+    * build cost — the sort-based dispatch resolution alone
+      (`plan_dispatch`, what the in-graph path also computes) vs the FULL
+      scheduled build: plan + iCh schedule over the per-expert loads +
+      worker-shard partition + packed (T, R, W) payload. The difference
+      is the price of running the model on the scheduler.
+    * the closed capacity loop — per-expert TRUE costs carry hidden
+      multiplicative heterogeneity the token-count estimate misses;
+      each round folds them in through `refine_cap_scale`
+      (observe/refine + next cap_scale) and the sharded-replay TRUE-cost
+      imbalance (makespan over the perfect-balance bound) is asserted
+      non-increasing across the rounds, so CI catches any regression of
+      the §2.8 feedback path.
+    """
+    from repro.core.simulator import SimParams
+    from repro.sched import ExpertLoadCosts, LoopScheduler
+    from repro.sched.moe import plan_dispatch, refine_cap_scale
+
+    rng = np.random.default_rng(seed)
+    # moderate zipf popularity: every expert sees traffic, hot experts see
+    # several times the mean (heavier skew starves most experts and the
+    # capacity cut flattens what's left — nothing to schedule)
+    pop = np.arange(1, n_experts + 1, dtype=np.float64) ** -1.0
+    logits = rng.gumbel(size=(n_tokens, n_experts)) + np.log(pop)[None]
+    e_topk = np.argsort(-logits, axis=1)[:, :k].astype(np.int32)
+    w = (rng.random((n_tokens, k)) + 0.1).astype(np.float32)
+    w /= w.sum(1, keepdims=True)
+
+    # cap_scale pins E: heavy skew can leave high-id experts unrouted
+    ones = np.ones(n_experts)
+    t_plan, plan = _best(lambda: plan_dispatch(e_topk, w, cap_scale=ones),
+                         repeats)
+    # time real rebuilds (cache off); 2-row tiles because the shard
+    # partition's unit is the superstep BLOCK — 8-row tiles over 512
+    # capped experts yield exactly p blocks, leaving the partition no
+    # freedom to act on refined costs
+    scheduler = LoopScheduler(p=p, cache_size=0, rows_per_tile=2)
+
+    def scheduled_build():
+        pl = plan_dispatch(e_topk, w, cap_scale=ones)
+        s = scheduler.schedule(ExpertLoadCosts(pl.counts))
+        sh = s.shard()
+        indptr, tok, wcsr = pl.csr()
+        T.pack_csr(indptr, tok, wcsr, s.tiles, pad_tiles_to=sh.superstep)
+        return s
+
+    t_sched, s = _best(scheduled_build, repeats)
+
+    zero = SimParams(dispatch_overhead=0.0, local_dispatch_overhead=0.0,
+                     speed_jitter=0.0)
+    true = (plan.counts.astype(np.float64)
+            * rng.uniform(0.5, 2.0, n_experts) + 0.01)
+    imb_true, imb_pred, cap_scale = [], [], None
+    for r in range(rounds + 1):
+        rep = s.replay_refined(true, sharded=True, params=zero)
+        imb_true.append(rep.makespan / (rep.busy / p))
+        imb_pred.append(s.imbalance())
+        if r == rounds:
+            break
+        s, cap_scale = refine_cap_scale(s, true)
+    for a, b in zip(imb_true, imb_true[1:]):
+        assert b <= a + 1e-9, (
+            f"refine round increased dispatch imbalance: {imb_true}")
+    assert s.generation == rounds
+    return {
+        "n_tokens": n_tokens, "n_experts": n_experts, "k": k, "p": p,
+        "kept": int(plan.counts.sum()), "stolen": plan.stolen,
+        "dropped": plan.dropped,
+        "plan_s": t_plan,
+        "scheduled_build_s": t_sched,
+        "schedule_overhead": t_sched / t_plan,
+        "rounds": rounds,
+        "imbalance_true": imb_true,
+        "imbalance_predicted": imb_pred,
+        "cap_scale_min": float(cap_scale.min()),
+        "cap_scale_max": float(cap_scale.max()),
+    }
+
+
 def _timed(fn, repeats: int = 3):
     import jax
     out = jax.block_until_ready(fn())  # trace + compile
@@ -382,6 +472,14 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
                      for i, m in enumerate(rf["makespans"]))
           + f",improvement={100 * rf['improvement']:.1f}%"
           + f",imbalance_final={rf['imbalance_final']:.4f}")
+    md = bench_moe_dispatch(sizes[0], repeats)
+    report["moe_dispatch"] = md
+    print(f"moe_dispatch,T={md['n_tokens']},E={md['n_experts']},"
+          f"p={md['p']},plan_s={md['plan_s']:.5f},"
+          f"scheduled_build_s={md['scheduled_build_s']:.5f},"
+          f"schedule_overhead={md['schedule_overhead']:.2f}x,"
+          + ",".join(f"round{i}_imbalance={v:.4f}"
+                     for i, v in enumerate(md["imbalance_true"])))
     if kernel_step:
         ks = bench_kernel_step(sizes[0])
         report["kernel_step_interpret"] = ks

@@ -1,0 +1,31 @@
+"""Pure-numpy oracle for the iCh-scheduled MoE expert-dispatch kernel."""
+import numpy as np
+
+
+def _silu(x):
+    return x / (1.0 + np.exp(-x))
+
+
+def moe_dispatch_ref(indptr, tok, w, x, wi, wg, wo):
+    """Expert-major CSR apply: y[t] += w_entry * FFN_e(x[t]) over every
+    kept dispatch entry of every expert e. The dispatch-plan analogue of
+    spmv_ref: the plan's CSR (sched/moe.py DispatchPlan.csr) is the
+    matrix, the gated expert FFN the per-entry work."""
+    n_tokens, d = x.shape
+    y = np.zeros((n_tokens, d), np.float32)
+    E = len(indptr) - 1
+    for e in range(E):
+        lo, hi = int(indptr[e]), int(indptr[e + 1])
+        if hi == lo:
+            continue
+        xs = x[tok[lo:hi]].astype(np.float32)          # (n_e, D)
+        h = xs @ wi[e]
+        g = xs @ wg[e]
+        ye = (_silu(g) * h) @ wo[e]                    # (n_e, D)
+        np.add.at(y, tok[lo:hi], ye * w[lo:hi, None])
+    return y
+
+
+def expert_loads_ref(indptr):
+    """Per-expert kept token counts straight off the CSR layout."""
+    return np.diff(np.asarray(indptr)).astype(np.int64)

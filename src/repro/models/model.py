@@ -187,7 +187,8 @@ def param_pspecs(cfg, tp: int = 16, max_seq: int = 0):
 # ----------------------------------------------------------------------------
 
 def _apply_block_full(cfg, kind, p, x, *, cap_scale=None, dist=None,
-                      window=0, cross_kv=None, causal=True):
+                      window=0, cross_kv=None, causal=True,
+                      moe_dropless=False):
     """Full-sequence block (train / prefill). Returns (x, kv, aux)."""
     aux = None
     kv = None
@@ -201,7 +202,8 @@ def _apply_block_full(cfg, kind, p, x, *, cap_scale=None, dist=None,
             x = x + h
         if kind == "moe":
             h, aux = MOE.apply_moe(cfg, p["moe"], A_norm(cfg, p["ln2"], x),
-                                   cap_scale, dist=dist)
+                                   cap_scale, dist=dist,
+                                   dropless=moe_dropless)
         else:
             h = L.apply_mlp(cfg, p["mlp"], A_norm(cfg, p["ln2"], x))
         x = x + h
@@ -248,7 +250,8 @@ def _constrain(x, dist: Optional[DistContext]):
 # ----------------------------------------------------------------------------
 
 def _run_segments(cfg, params, x, *, cap_scales=None, dist=None,
-                  cross_kv=None, causal=True, collect_kv=False):
+                  cross_kv=None, causal=True, collect_kv=False,
+                  moe_dropless=False):
     """Run the decoder stack. Returns (x, aux_summary, kvs per segment)."""
     aux_sum = {"aux_loss": jnp.zeros((), jnp.float32),
                "dropped": jnp.zeros((), jnp.float32),
@@ -290,7 +293,8 @@ def _run_segments(cfg, params, x, *, cap_scales=None, dist=None,
             cap = xs.get("cap")
             x, kv, aux = _apply_block_full(cfg, kind, p_layer, x,
                                            cap_scale=cap, dist=dist,
-                                           causal=causal)
+                                           causal=causal,
+                                           moe_dropless=moe_dropless)
             x = _constrain(x, dist)
             out = {}
             if collect_kv and kv is not None:
@@ -429,6 +433,10 @@ def prefill(cfg, params, batch, cap_scales=None, *, dist=None,
     Cache layout matches decode_step: per-segment stacked (L,B,S,Hkv,dh) K/V
     for attention stacks; per-layer state list for hybrid/ssm; whisper adds
     per-layer cross K/V computed once from the encoder output.
+
+    MoE layers dispatch DROPLESS here (per-request capacity — see
+    models/moe.py): a served token's output must not depend on which other
+    tokens share the batch, and decode must continue a prefill exactly.
     """
     x, n_prefix = _embed_inputs(cfg, params, batch, dtype)
     if cfg.family == "encdec":
@@ -447,7 +455,8 @@ def prefill(cfg, params, batch, cap_scales=None, *, dist=None,
         cache = states
     else:
         x, _, _, kvs = _run_segments(cfg, params, x, cap_scales=cap_scales,
-                                     dist=dist, collect_kv=True)
+                                     dist=dist, collect_kv=True,
+                                     moe_dropless=True)
         cache = [{"k": k, "v": v} for (k, v) in kvs]
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(cfg, params["embed"], x[:, -1])
@@ -535,7 +544,10 @@ def decode_step(cfg, params, tokens, cache, pos, cap_scales=None, *,
                 x = x + h
                 xin = A_norm(cfg, p_layer["ln2"], x)
                 if kind == "moe":
-                    h, _ = MOE.apply_moe(cfg, p_layer["moe"], xin, xs["cap"], dist=dist)
+                    # dropless like prefill: a single decode token must see
+                    # the same experts it would in a fresh longer prefill
+                    h, _ = MOE.apply_moe(cfg, p_layer["moe"], xin, xs["cap"],
+                                         dist=dist, dropless=True)
                 else:
                     h = L.apply_mlp(cfg, p_layer["mlp"], xin)
                 x = x + h

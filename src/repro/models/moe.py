@@ -7,13 +7,28 @@ workload. This layer integrates iCh (DESIGN.md §2) as:
 * per-expert *capacity* = the chunk size analogue, adapted by the paper's
   classification (eqs. 1-3, 8) on router load counts (the throughput signal
   that is exact and free in-graph, replacing wall-clock k_i);
-* *work stealing* = overflow tokens rerouted to the token's best underloaded
-  alternative expert (the THE-protocol steal-half becomes a second dispatch
-  round — on TPU the "steal" must be schedule-time, DESIGN.md §2);
+* *work stealing* = a schedule-time reroute: overflow entries are rerouted
+  to their token's max-slack alternative expert and ranked AFTER the
+  target's first-round keeps, all before any FFN work runs — there is no
+  runtime steal protocol to speak of on a TPU, the whole "steal" is one
+  extra position pass over the dispatch decisions (DESIGN.md §2.8);
 * `cap_scale` (E,) carried in the train state = the d_i array.
 
 Dispatch is sort-based (argsort by expert + in-segment positions), never the
 O(T*E*C) GShard one-hot einsum, so it scales to 1M-token global batches.
+The decision pass (`dispatch_decisions`) is mirrored bit-for-bit by the
+host-side planner `repro.sched.moe.plan_dispatch`, which feeds the same
+decisions through `LoopScheduler.schedule` into the worker-sharded expert
+kernel (`sched/kernels.py:MoeDispatchOp`) — the model and the scheduler
+agree on every routing decision at equal capacity
+(tests/test_moe_sched.py).
+
+Serving (prefill/decode) dispatches DROPLESS (`dropless=True`): capacity
+is per-request (cap = the whole local pool), so no token is ever dropped
+or rerouted and a token's expert outputs cannot depend on which other
+tokens share the serving batch — decode at position S is exactly a fresh
+prefill of S+1 tokens (tests/test_arch_smoke.py). Training keeps the
+capacity + steal semantics.
 
 Distribution: expert-parallel over the "model" axis via shard_map — tokens
 stay data-sharded and replicated across model ranks, each model rank runs its
@@ -32,7 +47,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import layers as L
-from ..sched.defaults import ICH_EPS
+from ..sched.defaults import (ICH_EPS, MOE_CAP_SCALE_MAX, MOE_CAP_SCALE_MIN,
+                              MOE_CAPACITY_FACTOR, MOE_CMAX_FACTOR,
+                              MOE_MIN_CAPACITY)
+from ..sched.moe import expert_capacity
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,9 +99,10 @@ def moe_pspec(cfg):
     return p
 
 
-def capacity(cfg, t_local: int, factor: float = 1.25) -> int:
+def capacity(cfg, t_local: int, factor: float = MOE_CAPACITY_FACTOR) -> int:
     """Base per-expert capacity for a local token pool of size t_local."""
-    return max(4, int(-(-cfg.experts_per_token * t_local * factor // cfg.n_experts)))
+    return expert_capacity(t_local, cfg.n_experts, cfg.experts_per_token,
+                           factor)
 
 
 # ----------------------------------------------------------------------------
@@ -113,7 +132,7 @@ def ich_update_cap_scale(counts: jnp.ndarray, cap_scale: jnp.ndarray,
     down = counts < mu - delta
     new = jnp.where(up, cap_scale * step, jnp.where(down, cap_scale / step,
                                                     cap_scale))
-    new = jnp.clip(new, 0.25, 2.0)
+    new = jnp.clip(new, MOE_CAP_SCALE_MIN, MOE_CAP_SCALE_MAX)
     budget = jnp.float32(cap_scale.shape[0])
     over = new.sum() / budget
     return jnp.where(over > 1.0, new / over, new)
@@ -134,15 +153,59 @@ def _dispatch_positions(experts_flat: jnp.ndarray, n_experts: int):
     return pos
 
 
+def dispatch_decisions(e_topk, cap_e, *, steal: bool = True,
+                       counts: Optional[jnp.ndarray] = None):
+    """Resolve the capacity cut + steal round over the flat (token, choice)
+    entries. The in-graph half of the dispatch decision pass; the host-side
+    planner `repro.sched.moe.plan_dispatch` mirrors it bit-for-bit.
+
+    e_topk (T, K) router choices; cap_e (E,) per-expert capacities; counts
+    optionally the precomputed (E,) router demand (recomputed if absent).
+    Returns (expert, token, pos, keep, stolen): final per-entry expert ids
+    (a stolen entry points at its steal target), token ids, in-segment
+    dispatch slots, the survival mask, and the stolen-entry count.
+    """
+    T, K = e_topk.shape
+    E = cap_e.shape[0]
+    ef = e_topk.reshape(-1)            # (T*K,)
+    tf = jnp.repeat(jnp.arange(T), K)  # token id per entry
+    pos = _dispatch_positions(ef, E)
+    keep = pos < cap_e[ef]
+
+    # ---- steal round: dropped entries go to the token's best LOW expert ----
+    if steal:
+        if counts is None:
+            counts = jnp.zeros((E,), jnp.float32).at[ef].add(1.0)
+        slack = jnp.maximum(cap_e.astype(jnp.float32) - counts, 0.0)  # (E,)
+        # per entry: token's alternative choices' slack (prefer max slack)
+        alt_slack = slack[e_topk]                       # (T,K)
+        fallback = e_topk[jnp.arange(T), jnp.argmax(alt_slack, axis=-1)]  # (T,)
+        ef2 = jnp.where(keep, ef, fallback[tf])
+        used = jnp.zeros((E,), jnp.int32).at[ef].add(keep.astype(jnp.int32))
+        pos2 = _dispatch_positions(jnp.where(keep, E + 1, ef2), E + 2)  # rank among stolen only
+        pos2 = pos2 + used[ef2]
+        keep2 = (~keep) & (pos2 < cap_e[ef2])
+        ef = jnp.where(keep2, ef2, ef)
+        pos = jnp.where(keep2, pos2, pos)
+        stolen = keep2.sum()
+        keep = keep | keep2
+    else:
+        stolen = jnp.zeros((), jnp.int32)
+    return ef, tf, pos, keep, stolen
+
+
 def moe_local(cfg, p, x, cap_scale, *, eps: float = ICH_EPS,
               n_local_experts: Optional[int] = None,
               local_expert_offset: int = 0,
-              capacity_factor: float = 1.25,
-              steal: bool = True):
+              capacity_factor: float = MOE_CAPACITY_FACTOR,
+              steal: bool = True, dropless: bool = False):
     """MoE forward on a local token pool x (T, D).
 
     Router runs over ALL experts; only entries whose expert falls in
     [offset, offset + n_local) are dispatched here (EP under shard_map).
+    `dropless` gives every expert capacity for the whole pool (serving:
+    per-request capacity, no competition, no steal, no drops — the
+    dispatch buffer grows to (E_loc, T, D)).
     Returns (y (T,D) partial output, aux dict).
     """
     T, D = x.shape
@@ -159,36 +222,23 @@ def moe_local(cfg, p, x, cap_scale, *, eps: float = ICH_EPS,
     me = probs.mean(axis=0)
     aux_loss = E * jnp.sum((counts_all / (T * K)) * me)
 
-    C_base = capacity(cfg, T, capacity_factor)
-    C_max = max(C_base, int(round(getattr(cfg, "moe_cmax_factor", 2.0) * C_base)))
-    cap_e = jnp.clip(jnp.round(C_base * cap_scale), 4, C_max).astype(jnp.int32)  # (E,)
-
-    ef = e_topk.reshape(-1)            # (T*K,)
-    tf = jnp.repeat(jnp.arange(T), K)  # token id per entry
-    wf = w_topk.reshape(-1)
-
-    pos = _dispatch_positions(ef, E)
-    keep = pos < cap_e[ef]
-
-    # ---- steal round: dropped entries go to the token's best LOW expert ----
-    if steal:
-        mu = counts_all.mean()
-        slack = jnp.maximum(cap_e.astype(jnp.float32) - counts_all, 0.0)  # (E,)
-        # per entry: token's alternative choices' slack (prefer max slack)
-        alt_slack = slack[e_topk]                       # (T,K)
-        fallback = e_topk[jnp.arange(T), jnp.argmax(alt_slack, axis=-1)]  # (T,)
-        ef2 = jnp.where(keep, ef, fallback[tf])
-        used = jnp.zeros((E,), jnp.int32).at[ef].add(keep.astype(jnp.int32))
-        pos2 = _dispatch_positions(jnp.where(keep, E + 1, ef2), E + 2)  # rank among stolen only
-        pos2 = pos2 + used[ef2]
-        keep2 = (~keep) & (pos2 < cap_e[ef2])
-        ef = jnp.where(keep2, ef2, ef)
-        pos = jnp.where(keep2, pos2, pos)
-        stolen = keep2.sum()
-        keep = keep | keep2
+    if dropless:
+        # per-request capacity: an expert can hold the whole pool, so the
+        # capacity cut keeps everything and the steal round has no work
+        C_max = T
+        cap_e = jnp.full((E,), T, jnp.int32)
+        steal = False
     else:
-        stolen = jnp.zeros((), jnp.int32)
+        C_base = capacity(cfg, T, capacity_factor)
+        C_max = max(C_base, int(round(getattr(
+            cfg, "moe_cmax_factor", MOE_CMAX_FACTOR) * C_base)))
+        cap_e = jnp.clip(jnp.round(C_base * cap_scale), MOE_MIN_CAPACITY,
+                         C_max).astype(jnp.int32)  # (E,)
 
+    wf = w_topk.reshape(-1)
+    ef, tf, pos, keep, stolen = dispatch_decisions(e_topk, cap_e,
+                                                   steal=steal,
+                                                   counts=counts_all)
     dropped = (~keep).sum()
 
     # ---- local dispatch: only entries on [offset, offset+e_loc) ----
@@ -225,14 +275,19 @@ def moe_local(cfg, p, x, cap_scale, *, eps: float = ICH_EPS,
 
 def apply_moe(cfg, p, x, cap_scale, *, dist: Optional[DistContext] = None,
               eps: float = ICH_EPS, steal: bool = True,
-              capacity_factor: float = 1.25):
-    """MoE block on x (B,S,D) (or (B,1,D) decode). Returns (y, aux)."""
+              capacity_factor: float = MOE_CAPACITY_FACTOR,
+              dropless: bool = False):
+    """MoE block on x (B,S,D) (or (B,1,D) decode). Returns (y, aux).
+
+    `dropless` is the serving dispatch mode (models/model.py prefill and
+    decode_step): per-request capacity, no drops, no steal."""
     B, S, D = x.shape
     x2 = x.reshape(B * S, D)
 
     if dist is None:
         y2, aux = moe_local(cfg, p, x2, cap_scale, eps=eps, steal=steal,
-                            capacity_factor=capacity_factor)
+                            capacity_factor=capacity_factor,
+                            dropless=dropless)
     else:
         tp = dist.tp
         e_loc = cfg.n_experts // tp
@@ -250,7 +305,8 @@ def apply_moe(cfg, p, x, cap_scale, *, dist: Optional[DistContext] = None,
             y_l, aux_l = moe_local(
                 cfg, p_l, x_l, cap_l, eps=eps,
                 n_local_experts=e_loc, local_expert_offset=idx * e_loc,
-                steal=steal, capacity_factor=capacity_factor)
+                steal=steal, capacity_factor=capacity_factor,
+                dropless=dropless)
             y_l = jax.lax.psum(y_l, dist.tp_axis)
             # make aux outputs fully replicated: scalars pmean'ed over every
             # mesh axis; counts summed over data shards (global expert load)

@@ -37,10 +37,17 @@ _LAZY = {
     # cost providers (sched/costs.py)
     "CostProvider": "costs",
     "DegreeCosts": "costs",
+    "ExpertLoadCosts": "costs",
     "ExplicitCosts": "costs",
     "NnzCosts": "costs",
     "RefinedCosts": "costs",
     "as_cost_provider": "costs",
+    # MoE dispatch planning (sched/moe.py, DESIGN.md §2.8)
+    "DispatchPlan": "moe",
+    "cap_scale_from_costs": "moe",
+    "expert_capacity": "moe",
+    "plan_dispatch": "moe",
+    "refine_cap_scale": "moe",
     # schedule cache (sched/cache.py)
     "CacheStats": "cache",
     "ScheduleCache": "cache",

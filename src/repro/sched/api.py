@@ -154,6 +154,19 @@ class Schedule:
         cost output against (`sched/kernels.py`)."""
         return self.tiles.slot_cost(self.costs, self.sizes)
 
+    def imbalance(self, *, p: Optional[int] = None,
+                  superstep: Optional[int] = None) -> float:
+        """max/mean per-worker cost of the sharded lowering (1.0 =
+        perfectly balanced). The load-balance figure the refine loop
+        drives down: observe() + refine() re-partitions from measured
+        costs, so a schedule built from stale estimates converges toward
+        imbalance 1.0 over rounds (benchmarks/bench_schedule_build.py,
+        tests/test_moe_sched.py)."""
+        shards = self.shard(p=p, superstep=superstep)
+        wc = shards.worker_cost(self.tile_cost())
+        mean = float(wc.mean())
+        return float(wc.max()) / mean if mean > 0 else 1.0
+
     # ------------------------------------------------------- (a) simulator
     def simulate(self, *, p: Optional[int] = None,
                  policy: Optional[P.Policy] = None,

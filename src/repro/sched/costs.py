@@ -170,6 +170,54 @@ class DegreeCosts(NnzCosts):
     _kind = "degree"
 
 
+class ExpertLoadCosts:
+    """Per-expert kept token counts from an MoE router — the expert-
+    dispatch analogue of `NnzCosts` (DESIGN.md §2.8): item = expert,
+    work units = tokens dispatched to it, and the counts ARE the
+    expert-major CSR payload layout of the dispatch plan, so sizes are
+    structural (refinement re-weights the partition but never re-derives
+    the token layout from measured costs).
+
+    Zero-load experts are allowed (a cold expert still owns an output
+    slot). Fingerprint eager, arrays copied on first use — same cache-hit
+    economics and no-aliasing guarantees as the other providers."""
+
+    _kind = "expert-load"
+
+    def __init__(self, counts: np.ndarray):
+        counts = np.asarray(counts)
+        if counts.ndim != 1 or counts.size < 1:
+            raise ValueError(
+                f"expert loads must be 1-D non-empty, got {counts.shape}")
+        if not np.issubdtype(counts.dtype, np.integer):
+            raise TypeError(
+                f"expert loads are token counts, expected an integer "
+                f"array, got {counts.dtype}")
+        if (counts < 0).any():
+            raise ValueError("expert loads must be non-negative")
+        self._counts = counts
+        self._sizes = None
+        self._fp = f"{self._kind}:{_digest(counts)}"
+
+    def sizes(self) -> np.ndarray:
+        if self._sizes is None:
+            self._sizes = self._counts.astype(np.int64)  # astype copies
+            self._counts = None
+        return self._sizes
+
+    def costs(self) -> np.ndarray:
+        return self.sizes().astype(np.float64)
+
+    def fingerprint(self) -> str:
+        return self._fp
+
+    @property
+    def sizes_are_structural(self) -> bool:
+        """Token counts ARE the dispatch-buffer layout; refinement keeps
+        them."""
+        return True
+
+
 class RefinedCosts:
     """Measured-cost refinement output: refreshed per-item costs, with the
     work-unit sizes either KEPT from the parent schedule (structural —

@@ -41,3 +41,17 @@ REFINE_BLEND = 1.0
 # Rounds the refine-loop demo/benchmark runs (observe -> refine cycles on
 # the jittered workload in benchmarks/bench_schedule_build.py).
 REFINE_ROUNDS = 3
+
+# MoE expert dispatch (DESIGN.md §2.8): per-expert capacity is the chunk-
+# size analogue, so its knobs live with the scheduler defaults and are
+# imported by BOTH the in-graph layer (models/moe.py) and the host-side
+# dispatch planner (sched/moe.py) — one source of truth keeps the two
+# paths bit-identical at equal capacity.
+MOE_CAPACITY_FACTOR = 1.25   # C_base = ceil(K * T * factor / E)
+MOE_CMAX_FACTOR = 2.0        # compiled expert buffer = factor * C_base
+MOE_MIN_CAPACITY = 4         # capacity floor (tiny decode pools)
+# cap_scale (the d_i array) is clipped to the materializable range: the
+# compiled buffer is C_max = MOE_CMAX_FACTOR * C_base, so scale can never
+# usefully exceed it, and 0.25 keeps cold experts warm enough to recover.
+MOE_CAP_SCALE_MIN = 0.25
+MOE_CAP_SCALE_MAX = 2.0

@@ -38,7 +38,7 @@ import numpy as np
 from repro.core.tiling import pack_csr
 
 from .api import Schedule
-from .costs import DegreeCosts, ExplicitCosts, NnzCosts
+from .costs import DegreeCosts, ExpertLoadCosts, ExplicitCosts, NnzCosts
 from .registry import register
 
 
@@ -213,6 +213,67 @@ class KMeansOp(_ObservableOp):
         return assign
 
 
+class MoeDispatchOp(_ObservableOp):
+    """iCh-scheduled MoE expert application: pack a dispatch plan once,
+    apply the expert FFN stack many times (DESIGN.md §2.8).
+
+    The plan's expert-major CSR (token ids + combine weights per expert)
+    packs through the same `pack_csr` path as SpMV — expert = item, a hot
+    expert's tokens split across tiles like a heavy row — and executes on
+    the worker-sharded `ich_moe_sharded` kernel. Besides the (p, S_B)
+    superstep cost stream every op emits, this kernel also returns
+    (p, E) per-worker PER-EXPERT cost totals (`last_expert_costs`);
+    `expert_load()` worker-sums them into the measured per-expert load
+    that `repro.sched.moe.refine_cap_scale` folds into the next step's
+    capacity scale."""
+
+    def __init__(self, schedule: Schedule, plan):
+        import jax.numpy as jnp
+        self.schedule = schedule
+        self.plan = plan
+        self.n_tokens = plan.n_tokens
+        self.n_experts = plan.n_experts
+        shards = self.shards = schedule.shard()
+        indptr, tok, w = plan.csr()
+        vals, cols = pack_csr(indptr, tok, w, schedule.tiles,
+                              pad_tiles_to=shards.superstep)
+        self.p = shards.p
+        self.superstep = shards.superstep
+        self.vals = jnp.asarray(vals)
+        self.cols = jnp.asarray(cols)
+        self.rowid = jnp.asarray(shards.shard_item_id(schedule.tiles))
+        self.blkid = jnp.asarray(shards.kernel_block_ids())
+        self.slot_cost = jnp.asarray(
+            _flat_slot_cost(schedule, shards.n_tiles_padded))
+        self.last_costs = None
+        self.last_expert_costs = None  # (p, E) from the latest invocation
+        self._jitted = {}  # interpret mode -> jitted apply (compile once)
+
+    def __call__(self, x, wi, wg, wo, interpret: bool | None = None):
+        """Apply the planned dispatch: x (n_tokens, D) token activations,
+        wi/wg (E, D, F), wo (E, F, D). Returns y (n_tokens, D)."""
+        import jax
+        from repro.kernels.ich_moe.ich_moe import ich_moe_sharded
+        interpret = _default_interpret(interpret)
+        if interpret not in self._jitted:
+            self._jitted[interpret] = jax.jit(functools.partial(
+                ich_moe_sharded, p=self.p, superstep=self.superstep,
+                interpret=interpret))
+        y, self.last_costs, self.last_expert_costs = self._jitted[interpret](
+            self.vals, self.cols, self.rowid, self.blkid, x, wi, wg, wo,
+            slot_cost=self.slot_cost)
+        return y
+
+    def expert_load(self) -> np.ndarray:
+        """Measured per-expert cost totals of the latest invocation
+        (worker-summed (E,) float64) — equals the plan's kept token
+        counts exactly; the signal `refine_cap_scale` consumes."""
+        if self.last_expert_costs is None:
+            raise ValueError("no kernel invocation to read yet; run the "
+                             "op first")
+        return np.asarray(self.last_expert_costs, np.float64).sum(axis=0)
+
+
 register(
     "spmv",
     costs=lambda indptr, indices, data: NnzCosts(indptr),
@@ -230,3 +291,9 @@ register(
     costs=lambda costs: ExplicitCosts(np.asarray(costs, np.float64)),
     build=KMeansOp,
     doc="K-Means assignment; input (predicted per-point costs).")
+register(
+    "moe-dispatch",
+    costs=lambda plan: ExpertLoadCosts(plan.counts),
+    build=MoeDispatchOp,
+    doc="MoE expert FFN over a dispatch plan (sched/moe.py); input "
+        "(DispatchPlan); cost = per-expert kept token load.")

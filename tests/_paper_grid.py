@@ -72,6 +72,15 @@ def gap_to_best(table: dict) -> float:
     return (best - table["ich"]) / best
 
 
+def static_speedup(loops, p, estimates=None, params=PARAMS):
+    """Eq.-9 speedup of the static uniform-chunk baseline at p — the
+    fixed-capacity analogue the moe-dispatch assertions compare against
+    (a static expert->worker partition ignores router skew exactly the
+    way uniform chunking ignores iteration skew)."""
+    t1 = best_time(loops, 1, "guided", estimates, params)
+    return t1 / app_time(loops, p, P.static(), estimates, params)
+
+
 # ---------------------------------------------------------------------------
 # Workload families (paper §5.1). Each entry: name -> (loops, estimates, p).
 # `estimates` is what workload-aware methods (binlpt) are handed — the
@@ -88,9 +97,40 @@ MODERATE_SPMV = ("circuit5M_dc", "delaunay_n23", "road_usa", "kmer_P1a",
 HUB_SPMV = ("FullChip", "wikipedia", "arabic-2005", "uk-2005", "wb-edu")
 
 SMOKE = {"synth": 4_000, "bfs": 3_000, "kmeans": 3_000, "spmv": 4_000,
-         "kmeans_rounds": 3}
+         "kmeans_rounds": 3, "moe_experts": 512}
 PAPER = {"synth": 50_000, "bfs": 20_000, "kmeans": 30_000, "spmv": 50_000,
-         "kmeans_rounds": 6}
+         "kmeans_rounds": 6, "moe_experts": 4_096}
+
+# Router-skew grid for the moe-dispatch family: zipf exponents spanning
+# mild to heavy expert-popularity skew (CV of per-expert load roughly
+# 0.5x to 3x the mean at these scales).
+MOE_ALPHAS = (0.6, 1.0, 1.4)
+
+
+def moe_expert_loads(n_experts: int, tokens_per_expert: int = 64,
+                     alpha: float = 1.0, seed: int = 0,
+                     capacity_factor: float = 1.25) -> np.ndarray:
+    """Per-expert KEPT token counts for one MoE dispatch step — the
+    loop-cost array of DESIGN.md §2.8 (experts are the irregular items).
+
+    Expert popularity follows a shuffled zipf law with exponent `alpha`;
+    T = n_experts * tokens_per_expert tokens route multinomially and the
+    per-expert capacity cut clips the result, exactly like
+    `repro.sched.moe.plan_dispatch` produces `plan.counts` — what the
+    scheduler actually partitions. Modeling PRE-cut router demand instead
+    would plant tens of percent of all work on one indivisible item at
+    reduced scale, the same reduction artifact as the extreme-hub SpMV
+    matrices (reported, not asserted)."""
+    from repro.sched.moe import expert_capacity
+
+    rng = np.random.default_rng(seed)
+    pop = np.arange(1, n_experts + 1, dtype=np.float64) ** -float(alpha)
+    rng.shuffle(pop)
+    pop /= pop.sum()
+    counts = rng.multinomial(n_experts * tokens_per_expert, pop)
+    cap = expert_capacity(n_experts * tokens_per_expert, n_experts, 1,
+                          capacity_factor)
+    return np.minimum(np.maximum(counts, 1), cap).astype(np.float64)
 
 
 def _spec(name: str) -> WL.MatrixSpec:
@@ -117,6 +157,14 @@ def families(scale: dict, spmv_names=MODERATE_SPMV) -> dict:
     for name in spmv_names:
         fams[f"spmv/{name}"] = ([WL.spmv_costs(_spec(name), scale["spmv"])],
                                 None, 28)
+    # MoE expert dispatch (DESIGN.md §2.8): per-expert token loads are the
+    # loop costs; p=8 workers shard the experts. Evaluated at several
+    # router-skew levels so the claim covers mild and heavy imbalance.
+    E = scale["moe_experts"]
+    for alpha in MOE_ALPHAS:
+        fams[f"moe-dispatch/zipf{alpha:g}"] = (
+            [moe_expert_loads(E, alpha=alpha, seed=int(alpha * 10))],
+            None, 8)
     return fams
 
 

@@ -39,16 +39,14 @@ def test_reduced_train_step_no_nans(name):
 
 @pytest.mark.parametrize("name", [
     "olmo-1b", "qwen2-1.5b",
-    # MoE capacity makes decode/prefill equivalence inexact by design: in
-    # prefill all S+1 tokens compete for per-expert capacity (models/moe.py
-    # `keep = pos < cap_e[ef]`), so the token at position S can be dropped
-    # or steal-rerouted, while in single-token decode it never competes —
-    # the logits then legitimately differ beyond tolerance on some batch
-    # rows. A fix needs decode-aware capacity accounting (tracked in
-    # CHANGES.md PR 4), not a test tweak.
-    pytest.param("olmoe-1b-7b", marks=pytest.mark.xfail(
-        strict=False, reason="MoE capacity drops differ between prefill "
-        "(S+1 tokens compete) and decode (1 token); see models/moe.py")),
+    # olmoe exercises decode-aware capacity accounting: serving dispatches
+    # MoE layers DROPLESS (per-request capacity, models/moe.py), so the
+    # token at position S gets the same experts whether it arrives in a
+    # fresh S+1-token prefill or as a single decode step. Under the old
+    # shared-capacity dispatch the two pools competed differently and this
+    # case was xfail'd; the regression pin for the mechanism lives in
+    # tests/test_moe_sched.py.
+    "olmoe-1b-7b",
     "zamba2-1.2b", "xlstm-350m", "whisper-small"])
 def test_decode_matches_prefill(name):
     """decode at position S must equal a fresh prefill of S+1 tokens."""
