@@ -25,6 +25,11 @@ Measures, across item counts (default 10k / 100k / 1M):
     build (plan + schedule + shard + pack), and the closed capacity loop —
     the sharded-replay TRUE-cost imbalance is asserted non-increasing
     across three `refine_cap_scale` rounds;
+  * fault-injection degradation (DESIGN.md §2.9) at the smallest size:
+    makespan inflation of the iCh simulator run vs number of killed
+    workers (seeded `FaultPlan` deaths, queues reclaimed by survivors) —
+    asserted monotone in the kill count, bounded by 1.5x the fault-free
+    run on the surviving worker count, and bit-identical across replays;
   * the measured-cost refine loop (DESIGN.md §2.7) at the smallest size:
     a jittered workload is scheduled from a-priori estimates, per-tile
     true costs are observed from a sharded replay, and
@@ -323,6 +328,65 @@ def bench_moe_dispatch(n_tokens: int, repeats: int, n_experts: int = 512,
     }
 
 
+def bench_degradation(n: int, p: int = 4, seed: int = 100) -> dict:
+    """Graceful degradation under injected worker deaths (DESIGN.md §2.9):
+    makespan inflation vs number of killed workers, asserted monotone.
+
+    Near-uniform per-item costs and EARLY deaths (after each victim's
+    first chunk), so the lost capacity dominates the measurement — on
+    heavy-tailed workloads steal-path luck can mask a single death (a
+    different chunk/steal pattern occasionally beats the fault-free run).
+    Asserted, so CI catches any reclaim regression:
+
+      * inflation(k) > 1 and strictly increasing in k for k = 1..p-1
+        (each additional dead worker costs more);
+      * bounded factor: the k-death run stays within 1.5x of a fault-free
+        run on the p-k survivors (recovery never costs more than simply
+        having started with the smaller machine, modulo steal luck);
+      * every plan replays bit-identically (same makespan + fault trace).
+    """
+    from repro.core.policies import ich
+    from repro.core.simulator import simulate
+    from repro.robust import FaultPlan
+
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(8.0, 12.0, n)
+    clean = simulate(costs, p, ich())
+    rows = []
+    prev = 1.0
+    for k in range(1, p):
+        plan = FaultPlan(seed=seed,
+                         deaths=tuple((w, 1) for w in range(k)))
+        faulty = simulate(costs, p, ich(), faults=plan)
+        again = simulate(costs, p, ich(), faults=plan)
+        assert faulty.makespan == again.makespan, \
+            f"chaos replay diverged at k={k}"
+        assert faulty.fault_log == again.fault_log
+        inflation = faulty.makespan / clean.makespan
+        assert inflation > prev, (
+            f"inflation must increase monotonically in killed workers: "
+            f"k={k} gave {inflation:.4f} after {prev:.4f}")
+        survivors = simulate(costs, p - k, ich())
+        assert faulty.makespan <= 1.5 * survivors.makespan, (
+            f"k={k}: faulty makespan {faulty.makespan:.1f} exceeds 1.5x "
+            f"the fault-free p-{k} run {survivors.makespan:.1f}")
+        rows.append({
+            "killed": k,
+            "makespan": faulty.makespan,
+            "inflation": inflation,
+            "vs_survivor_machine": faulty.makespan / survivors.makespan,
+            "deaths": faulty.deaths,
+            "reclaims": faulty.reclaims,
+        })
+        prev = inflation
+    return {
+        "n_items": n, "p": p, "policy": "ich",
+        "workload": f"uniform(8, 12), seed {seed}, deaths after 1 chunk",
+        "clean_makespan": clean.makespan,
+        "rows": rows,
+    }
+
+
 def _timed(fn, repeats: int = 3):
     import jax
     out = jax.block_until_ready(fn())  # trace + compile
@@ -480,6 +544,12 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
           f"schedule_overhead={md['schedule_overhead']:.2f}x,"
           + ",".join(f"round{i}_imbalance={v:.4f}"
                      for i, v in enumerate(md["imbalance_true"])))
+    dg = bench_degradation(sizes[0])
+    report["degradation"] = dg
+    print(f"degradation,n={dg['n_items']},p={dg['p']},"
+          f"clean_makespan={dg['clean_makespan']:.1f},"
+          + ",".join(f"k{r['killed']}_inflation={r['inflation']:.3f}"
+                     for r in dg["rows"]))
     if kernel_step:
         ks = bench_kernel_step(sizes[0])
         report["kernel_step_interpret"] = ks

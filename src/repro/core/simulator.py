@@ -27,6 +27,8 @@ import numpy as np
 
 from . import policies as P
 from . import welford as W
+# numpy-only, imports nothing back from repro.core (see robust/faults.py)
+from repro.robust.faults import FaultClock, FaultError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +65,14 @@ class SimResult:
     # per-worker busy time (sum of work/speed dispatched to each worker) —
     # the imbalance diagnostic the measured-cost refiner reports on
     worker_busy: Optional[np.ndarray] = None
+    # ---- fault injection (repro.robust, DESIGN.md §2.9) ----
+    deaths: int = 0      # workers that retired under an injected death
+    stall_events: int = 0
+    reclaims: int = 0    # whole-range steals from dead workers' queues
+    # ("death", t, w) / ("stall", t, w, duration) /
+    # ("reclaim", t, thief, victim, begin, end), in simulated-time order;
+    # filled when simulate(..., faults=...) is given a plan
+    fault_log: Optional[list] = None
 
     @property
     def efficiency(self) -> float:
@@ -97,10 +107,19 @@ def simulate(
     record_assignment: bool = False,
     estimate: np.ndarray = None,
     record_chunks: bool = False,
+    faults=None,
 ) -> SimResult:
     """`estimate` is the workload estimate HANDED to workload-aware policies
     (binlpt); defaults to the true costs. Passing a stale estimate models
-    K-Means-style per-round workload drift (paper §6.1)."""
+    K-Means-style per-round workload drift (paper §6.1).
+
+    `faults` is an optional `repro.robust.FaultPlan` (DESIGN.md §2.9):
+    worker deaths and stalls become discrete events. A dead worker's
+    remaining queue is reclaimed by survivors through the steal path
+    (whole-range drain — a dead owner never frees its own last item), so
+    every iteration is still dispatched exactly once; if every worker dies
+    with work outstanding, `FaultError` is raised. Fault replay is
+    deterministic: the same plan + params yields an identical trace."""
     costs = np.asarray(costs, dtype=np.float64)
     n = len(costs)
     csum = np.concatenate([[0.0], np.cumsum(costs)])
@@ -108,6 +127,9 @@ def simulate(
     res.worker_busy = np.zeros(p)
     if record_chunks:
         res.chunk_log = []
+    if faults is not None:
+        faults.validate_workers(p)
+        res.fault_log = []
     if n == 0:
         return res
     speeds = _speeds(p, params)
@@ -116,11 +138,22 @@ def simulate(
     if policy.kind == P.CENTRAL:
         est = costs if estimate is None else np.asarray(estimate, np.float64)
         _simulate_central(costs, csum, p, policy, params, speeds, res,
-                          assignment, est)
+                          assignment, est, faults)
     else:
-        _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignment)
+        _simulate_distributed(costs, csum, p, policy, params, speeds, res,
+                              assignment, faults)
     res.assignment = assignment
     return res
+
+
+class _FaultState(FaultClock):
+    """The shared fault clock plus the simulator's per-worker dead flags."""
+
+    __slots__ = ("dead",)
+
+    def __init__(self, plan, p: int):
+        super().__init__(plan, p)
+        self.dead = np.zeros(p, dtype=bool)
 
 
 # ----------------------------------------------------------------------------
@@ -128,12 +161,20 @@ def simulate(
 # ----------------------------------------------------------------------------
 
 def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
-                      estimate=None):
+                      estimate=None, faults=None):
     n = len(costs)
     pretiled: Optional[list[tuple[int, int]]] = None
     if policy.law == "pretiled":
         pretiled = P.pretile(policy, costs if estimate is None else estimate, p)
     grab_cost = params.task_overhead if policy.name == "taskloop" else params.dispatch_overhead
+
+    if faults is not None and policy.name in ("assigned", "binlpt"):
+        # both bind chunks to workers statically before the run: a dead
+        # worker's share has no queue anyone can reclaim it from
+        raise ValueError(
+            f"policy {policy.name!r} assigns work statically; fault "
+            "injection needs a queue survivors can reclaim from")
+    fs = _FaultState(faults, p) if faults is not None else None
 
     if policy.name == "assigned":
         # Static per-chunk worker assignment (policies.assigned): worker w
@@ -205,6 +246,21 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
     while heap:
         t, _, w = heapq.heappop(heap)
         makespan = max(makespan, t)
+        if fs is not None and not fs.dead[w]:
+            # fault clock ticks at chunk boundaries: death first (a worker
+            # both due to die and due to stall is simply dead), then stalls
+            if fs.dies_now(w):
+                fs.dead[w] = True
+                res.deaths += 1
+                res.fault_log.append(("death", t, w))
+                continue  # retires: never requeued; queue stays shared
+            st = fs.pending_stall(w)
+            if st is not None:
+                res.stall_events += 1
+                res.fault_log.append(("stall", t, w, st.duration))
+                seq += 1
+                heapq.heappush(heap, (t + st.duration, seq, w))
+                continue
         # request work from the central queue
         if pretiled is not None:
             if next_chunk >= len(pretiled):
@@ -232,11 +288,20 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
             res.chunk_log.append((b, e, w, work))
         done = start + grab_cost + work / speeds[w]
         res.chunks += 1
+        if fs is not None:
+            fs.chunks_done[w] += 1
         res.busy += work / speeds[w]
         res.worker_busy[w] += work / speeds[w]
         res.overhead += (start - t) + grab_cost
         seq += 1
         heapq.heappush(heap, (done, seq, w))
+    if fs is not None:
+        stranded = (len(pretiled) - next_chunk if pretiled is not None
+                    else n - next_idx)
+        if stranded > 0:
+            raise FaultError(
+                f"every worker died with {stranded} central-queue "
+                f"chunk(s)/iteration(s) outstanding")
     res.makespan = makespan
 
 
@@ -244,7 +309,9 @@ def _simulate_central(costs, csum, p, policy, params, speeds, res, assignment,
 # Distributed-queue family: stealing / iCh (THE protocol)
 # ----------------------------------------------------------------------------
 
-def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignment):
+def _simulate_distributed(costs, csum, p, policy, params, speeds, res,
+                          assignment, faults=None):
+    fs = _FaultState(faults, p) if faults is not None else None
     n = len(costs)
     # Even contiguous initial split (paper §3.1): |q_i| = n/p.
     bounds = np.linspace(0, n, p + 1).astype(np.int64)
@@ -279,6 +346,8 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
 
         if kind == 1:  # chunk completed: update bookkeeping, then go idle
             ks[w] += payload
+            if fs is not None:
+                fs.chunks_done[w] += 1
             if policy.adaptive:
                 mu, delta = W.ich_band(ks, policy.eps)
                 ds[w] = W.adapt_d(ds[w], W.classify(ks[w], mu, delta))
@@ -289,6 +358,21 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
             continue
 
         # kind == 0: idle -> dispatch from own queue or steal
+        if fs is not None and not fs.dead[w]:
+            # fault clock ticks at chunk boundaries (death wins over a
+            # stall due at the same boundary); a dead worker's deque keeps
+            # its [begin, end) range for survivors to reclaim
+            if fs.dies_now(w):
+                fs.dead[w] = True
+                res.deaths += 1
+                res.fault_log.append(("death", t, w))
+                continue  # retires; never requeued
+            st = fs.pending_stall(w)
+            if st is not None:
+                res.stall_events += 1
+                res.fault_log.append(("stall", t, w, st.duration))
+                push(t + st.duration, w, 0)
+                continue
         if qlen(w) > 0:
             fails[w] = 0
             start = max(t, lock_free[w])
@@ -325,8 +409,13 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
         v = int((w + 1 + rng.integers(p - 1)) % p) if p > 1 else w
         remote = (w // params.socket_size) != (v // params.socket_size)
         rmul = params.remote_penalty if remote else 1.0
-        if p == 1 or qlen(v) // 2 <= 0:
-            # empty probe: victim has <2 stealable iterations
+        # a DEAD victim's queue is reclaimed whole: steal-half would strand
+        # its last iteration forever (the owner never drains it), so the
+        # thief takes the entire remaining range through the same lock
+        dead_v = fs is not None and fs.dead[v]
+        if p == 1 or (qlen(v) if dead_v else qlen(v) // 2) <= 0:
+            # empty probe: victim has <2 stealable iterations (or a dead
+            # victim's queue is already empty)
             res.failed_steals += 1
             probe = params.failed_steal_overhead * rmul
             back = params.failed_steal_overhead * float(2 ** min(fails[w], 10))
@@ -337,8 +426,9 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
         cost = params.steal_overhead * rmul
         start = max(t, lock_free[v])
         lock_free[v] = start + cost
-        half = qlen(v) // 2  # re-read under the lock (may have drained)
-        if half <= 0:
+        # re-read under the lock (may have drained)
+        take = qlen(v) if dead_v else qlen(v) // 2
+        if take <= 0:
             # rollback (paper Listing 1 lines 12-16)
             res.failed_steals += 1
             back = params.failed_steal_overhead * float(2 ** min(fails[w], 10))
@@ -346,10 +436,17 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
             res.overhead += (start - t) + cost + back
             push(start + cost + back, w, 0)
             continue
-        new_end = int(qend[v]) - half
-        qend[v] = new_end
-        qbegin[w] = new_end
-        qend[w] = new_end + half
+        if dead_v:
+            b, e = int(qbegin[v]), int(qend[v])
+            qbegin[v] = e
+            qbegin[w], qend[w] = b, e
+            res.reclaims += 1
+            res.fault_log.append(("reclaim", start + cost, w, v, b, e))
+        else:
+            new_end = int(qend[v]) - take
+            qend[v] = new_end
+            qbegin[w] = new_end
+            qend[w] = new_end + take
         res.steals += 1
         fails[w] = 0
         res.overhead += (start - t) + cost
@@ -357,6 +454,10 @@ def _simulate_distributed(costs, csum, p, policy, params, speeds, res, assignmen
             ks[w], ds[w] = W.steal_merge(ks[w], ds[w], ks[v], ds[v])
         push(start + cost, w, 0)
 
+    if fs is not None and remaining_total > 0:
+        raise FaultError(
+            f"every worker died with {remaining_total} iteration(s) "
+            f"stranded in dead workers' queues")
     res.makespan = makespan
     res.ks = ks
     res.ds = ds

@@ -1,0 +1,16 @@
+"""`repro.robust` — deterministic fault injection and recovery
+(DESIGN.md §2.9).
+
+One seeded `FaultPlan` spans all three execution layers: the discrete-event
+simulator replays it as fault events (`core/simulator.py`, `faults=`), the
+threaded executor survives it with supervised workers (`core/executor.py`:
+retry budgets, watchdog, dead-deque reclaim), and `Schedule.replay_faulty`
+reports the makespan inflation a chaos scenario costs a constructed
+schedule. Everything derived from a plan is a pure function of its seed, so
+chaos runs replay bit-identically.
+"""
+from .faults import (ChaosBody, Death, FaultClock, FaultError, FaultPlan,
+                     FaultReport, InjectedFault, Stall, simulate_faulty)
+
+__all__ = ["ChaosBody", "Death", "FaultClock", "FaultError", "FaultPlan",
+           "FaultReport", "InjectedFault", "Stall", "simulate_faulty"]

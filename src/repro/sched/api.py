@@ -31,6 +31,7 @@ from repro.core import executor as E
 from repro.core import policies as P
 from repro.core import simulator as S
 from repro.core import tiling as T
+from repro.robust import faults as F
 
 from .adaptive import CostRefiner
 from .cache import CacheStats, ScheduleCache
@@ -444,34 +445,70 @@ class Schedule:
         return S.replay_refined(unit, self.unit_ranges(), p or self.p,
                                 params=prm, record_chunks=record_chunks)
 
+    # --------------------------- fault replay & chaos runs (DESIGN.md §2.9)
+    def replay_faulty(self, plan: F.FaultPlan, *,
+                      p: Optional[int] = None,
+                      policy: Optional[P.Policy] = None,
+                      params: Optional[S.SimParams] = None,
+                      record_chunks: bool = False,
+                      record_assignment: bool = False) -> F.FaultReport:
+        """Simulate this schedule's policy over its cost array twice —
+        fault-free and under the seeded `FaultPlan` — and report both runs
+        plus the makespan inflation the chaos scenario costs it. Dead
+        workers' queued work is reclaimed by survivors through the steal
+        machinery, so the faulty run still dispatches every item exactly
+        once (or raises `repro.robust.FaultError` when no live worker
+        remains). Deterministic: the same plan replays bit-identically."""
+        return F.simulate_faulty(
+            self.costs, p or self.p, policy or self.policy, plan,
+            params=params if params is not None else self.sim_params,
+            record_chunks=record_chunks,
+            record_assignment=record_assignment)
+
     # -------------------------------------------------------- (b) executor
     def parallel_for(self, body: Callable[[int], None], *,
                      p: Optional[int] = None,
                      policy: Optional[P.Policy] = None,
                      seed: int = 0, record_chunks: bool = False,
-                     deterministic: bool = False) -> E.ExecStats:
+                     deterministic: bool = False,
+                     faults: Optional[F.FaultPlan] = None,
+                     retries: int = 0, retry_backoff_s: float = 0.0,
+                     watchdog_s: Optional[float] = None) -> E.ExecStats:
         """Run `body(i)` for every item on real threads under `policy`
         (default: the schedule's). `record_chunks=True` fills the per-chunk
-        wall-time log `observe()` consumes (DESIGN.md §2.7)."""
+        wall-time log `observe()` consumes (DESIGN.md §2.7). `faults`,
+        `retries`/`retry_backoff_s`, and `watchdog_s` pass through to the
+        supervised executor (DESIGN.md §2.9): injected chaos, per-item
+        retry budget, and heartbeat-based dead-worker detection."""
         return E.parallel_for(self.n_items, body, p or self.p,
                               policy or self.policy, seed=seed,
                               record_chunks=record_chunks,
-                              deterministic=deterministic)
+                              deterministic=deterministic, faults=faults,
+                              retries=retries,
+                              retry_backoff_s=retry_backoff_s,
+                              watchdog_s=watchdog_s)
 
     def parallel_for_units(self, body: Callable[[int], None], *,
                            p: Optional[int] = None,
                            seed: int = 0, record_chunks: bool = False,
-                           deterministic: bool = False) -> E.ExecStats:
+                           deterministic: bool = False,
+                           faults: Optional[F.FaultPlan] = None,
+                           retries: int = 0, retry_backoff_s: float = 0.0
+                           ) -> E.ExecStats:
         """Run `body(u)` for every flattened work unit on real threads,
         dispatched in exactly the constructed tile chunks (one central-queue
         chunk per tile — the threaded twin of `replay`). With
         `record_chunks=True` the returned stats carry one wall-time record
-        per tile, ready for `observe()`."""
+        per tile, ready for `observe()`. `faults`/`retries` pass through to
+        the supervised executor (central path: no watchdog — there are no
+        per-worker deques to reclaim; survivors drain the shared queue)."""
         n_units = int(self.sizes.sum())
         return E.parallel_for(n_units, body, p or self.p,
                               P.pretiled(self.unit_ranges()), seed=seed,
                               record_chunks=record_chunks,
-                              deterministic=deterministic)
+                              deterministic=deterministic, faults=faults,
+                              retries=retries,
+                              retry_backoff_s=retry_backoff_s)
 
 
 class LoopScheduler:

@@ -82,18 +82,38 @@ class Engine:
 
     # ---------------- decode ----------------
     def generate(self, prompts: np.ndarray, n_new: int = 16,
-                 greedy: bool = True):
-        """prompts (B, S). Returns (B, n_new) generated ids + stats."""
+                 greedy: bool = True,
+                 deadline_s: Optional[float] = None):
+        """prompts (B, S). Returns (B, n_done) generated ids + stats.
+
+        `deadline_s` is the per-request latency budget, measured from entry
+        (so chunked prefill spends from the same budget). When the clock
+        runs out mid-decode the engine degrades gracefully instead of
+        blowing the SLO: remaining decode steps are shed and the partial
+        output is returned with `stats["degraded"] = True` and the shed
+        count in `stats["n_shed"]` (DESIGN.md §2.9). At least one token —
+        the prefill argmax — is always produced; without a deadline
+        `n_done == n_new` and the stats contract is unchanged apart from
+        the constant `degraded=False` / `n_shed=0` fields."""
+        t_start = time.perf_counter()
         B, S = prompts.shape
         logits, cache, chunk_log = self.prefill_chunked(prompts)
         cache = self._pad_cache(cache, S)
         out = []
+        degraded = False
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         for i in range(n_new):
             out.append(np.asarray(tok)[:, 0])
+            if (deadline_s is not None and i + 1 < n_new
+                    and time.perf_counter() - t_start > deadline_s):
+                degraded = True
+                break
             logits, cache = self._decode(self.params, tok, cache, S + i)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return np.stack(out, 1), {"chunks": chunk_log, "d_final": self.d}
+        stats = {"chunks": chunk_log, "d_final": self.d,
+                 "degraded": degraded, "n_shed": n_new - len(out),
+                 "deadline_s": deadline_s}
+        return np.stack(out, 1), stats
 
     def _pad_cache(self, cache, s_now: int):
         """Grow prefill caches to max_seq for in-place decode updates."""

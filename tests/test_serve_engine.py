@@ -1,0 +1,173 @@
+"""First test coverage for the serving engine (`repro/serve/engine.py`):
+chunked-prefill equivalence, iCh divisor adaptation, `generate` contracts,
+and deadline-based graceful degradation (DESIGN.md §2.9).
+
+Runs on a reduced decoder config (repro.configs.reduced) so the whole
+module is CPU-cheap; the model params are built once per module.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import model as M
+from repro.serve.engine import Engine, EngineConfig
+
+ECFG = dict(max_seq=64, min_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced(get_arch("qwen2-1.5b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    return cfg, params
+
+
+@pytest.fixture()
+def engine(tiny_model):
+    cfg, params = tiny_model
+    return Engine(cfg, params, EngineConfig(**ECFG))
+
+
+def prompts_for(cfg, B=2, S=24, seed=2):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed),
+                                         (B, S), 0, cfg.vocab_size))
+
+
+# ------------------------------------------------ chunked prefill
+
+class TestChunkedPrefill:
+    def test_matches_one_shot_bit_identical(self, tiny_model, engine):
+        """Chunked prefill's final logits must equal a one-shot prefill of
+        the same prompt bit-for-bit: the last chunk runs the FULL prompt
+        through the same jitted prefill, so chunking affects scheduling
+        (and the iCh divisor), never the math."""
+        cfg, params = tiny_model
+        toks = prompts_for(cfg)
+        logits, _, log = engine.prefill_chunked(toks)
+        one_shot = Engine(cfg, params, EngineConfig(**ECFG))
+        ref, _ = one_shot._prefill(params, {"tokens": np.asarray(toks)})
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+        assert len(log) > 1  # S=24 with d_0=4, min_chunk=4 -> chunked
+
+    def test_chunk_log_covers_prompt_exactly(self, tiny_model, engine):
+        cfg, _ = tiny_model
+        B, S = 2, 24
+        _, _, log = engine.prefill_chunked(prompts_for(cfg, B, S))
+        assert sum(rec["chunk"] for rec in log) == S
+        assert all(rec["chunk"] >= 1 for rec in log)
+        assert all(set(rec) == {"chunk", "dt", "d"} for rec in log)
+
+
+# ------------------------------------------------ iCh divisor adaptation
+
+def bare_engine(**overrides):
+    """An Engine shell with only the state `_adapt`/`_next_chunk` touch —
+    no model build needed to pin the divisor dynamics."""
+    eng = Engine.__new__(Engine)
+    eng.ecfg = EngineConfig(**{**ECFG, **overrides})
+    eng.d = eng.ecfg.init_divisor
+    eng.ks = []
+    return eng
+
+
+class TestAdapt:
+    def steady(self, eng, rounds=6):
+        for _ in range(rounds):
+            eng._adapt(100, 1.0)
+
+    def test_steady_throughput_keeps_divisor(self):
+        eng = bare_engine()
+        self.steady(eng)
+        assert eng.d == eng.ecfg.init_divisor
+
+    def test_fast_chunk_doubles_divisor(self):
+        """Fast chunk (throughput above the mu + eps*mu band) -> HIGH ->
+        d doubles -> next chunk shrinks, leaving slots for decode."""
+        eng = bare_engine()
+        self.steady(eng)
+        eng._adapt(100, 0.01)
+        assert eng.d == 2 * eng.ecfg.init_divisor
+
+    def test_slow_chunk_halves_divisor(self):
+        """Slow chunk (cache pressure, long context) -> LOW -> d halves ->
+        next chunk grows to amortize dispatch."""
+        eng = bare_engine()
+        self.steady(eng)
+        eng._adapt(100, 100.0)
+        assert eng.d == eng.ecfg.init_divisor / 2
+
+    def test_divisor_clamped_to_bounds(self):
+        eng = bare_engine()
+        for k in range(12):  # ever-faster chunks
+            eng._adapt(100, 1.0 / 10 ** k)
+        assert eng.d <= 64.0
+        eng = bare_engine()
+        for k in range(12):  # ever-slower chunks
+            eng._adapt(100, 1.0 * 10 ** k)
+        assert eng.d >= 1.0
+
+    def test_next_chunk_contracts(self):
+        eng = bare_engine()
+        eng.d = 4.0
+        assert eng._next_chunk(100) == 25
+        assert eng._next_chunk(3) == 3      # never exceeds remaining
+        eng.d = 64.0
+        assert eng._next_chunk(100) == 4    # min_chunk floor
+
+
+# ------------------------------------------------ generate
+
+class TestGenerate:
+    def test_output_shape_and_stats_contract(self, tiny_model, engine):
+        cfg, _ = tiny_model
+        B, S, n_new = 2, 24, 5
+        out, stats = engine.generate(prompts_for(cfg, B, S), n_new=n_new)
+        assert out.shape == (B, n_new)
+        assert np.issubdtype(out.dtype, np.integer)
+        assert (out >= 0).all() and (out < cfg.vocab_size).all()
+        assert set(stats) == {"chunks", "d_final", "degraded", "n_shed",
+                              "deadline_s"}
+        assert stats["degraded"] is False and stats["n_shed"] == 0
+        assert stats["deadline_s"] is None
+        assert sum(rec["chunk"] for rec in stats["chunks"]) == S
+        assert stats["d_final"] == engine.d
+
+    def test_greedy_generate_deterministic(self, tiny_model):
+        cfg, params = tiny_model
+        toks = prompts_for(cfg)
+        outs = [Engine(cfg, params, EngineConfig(**ECFG))
+                .generate(toks, n_new=4)[0] for _ in range(2)]
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_deadline_sheds_decode_steps(self, tiny_model, engine):
+        """deadline_s=0 is already spent after prefill: the engine sheds
+        all remaining decode steps, returns the partial output (at least
+        the prefill argmax token) and flags the degradation."""
+        cfg, _ = tiny_model
+        n_new = 6
+        out, stats = engine.generate(prompts_for(cfg), n_new=n_new,
+                                     deadline_s=0.0)
+        assert stats["degraded"] is True
+        assert 1 <= out.shape[1] < n_new
+        assert out.shape[1] + stats["n_shed"] == n_new
+        assert stats["deadline_s"] == 0.0
+
+    def test_generous_deadline_not_degraded(self, tiny_model, engine):
+        cfg, _ = tiny_model
+        out, stats = engine.generate(prompts_for(cfg), n_new=3,
+                                     deadline_s=600.0)
+        assert stats["degraded"] is False and stats["n_shed"] == 0
+        assert out.shape[1] == 3
+
+    def test_degraded_prefix_matches_full_run(self, tiny_model):
+        """Degradation sheds FUTURE work only: the tokens a degraded run
+        does emit are the same tokens the unconstrained run emits."""
+        cfg, params = tiny_model
+        toks = prompts_for(cfg)
+        full, _ = Engine(cfg, params, EngineConfig(**ECFG)) \
+            .generate(toks, n_new=6)
+        part, stats = Engine(cfg, params, EngineConfig(**ECFG)) \
+            .generate(toks, n_new=6, deadline_s=0.0)
+        assert stats["degraded"] is True
+        np.testing.assert_array_equal(part, full[:, :part.shape[1]])
