@@ -1,0 +1,171 @@
+"""Serving benchmark: tail latency vs offered load per dispatch policy.
+
+Sweeps the continuous batcher (serve/batcher.py) over offered-load levels
+x dispatch policies on the SIMULATED backend — a seeded `StepCostModel`
+prices each step and a `SimClock` advances by it, so the whole sweep is
+bit-deterministic (CI-safe, zero machine noise) while still exercising the
+real queue/policy/batcher code paths. Arrivals are open-loop Poisson
+(arrivals never wait for completions: overload shows up as backlog and
+tail latency, not reduced load) with heavy-tailed zipf prompt lengths, so
+a monster prompt really does land in front of short ones.
+
+Policies compared (>= 3, the ISSUE contract):
+
+  * ``fcfs-static``  — arrival order, fixed chunk (head-of-line baseline);
+  * ``round-robin``  — fixed chunk rotating across prefill streams;
+  * ``ich-adaptive`` — per-request iCh chunk divisors + refined-cost
+    SRPT-with-aging target selection through the `sched` facade.
+
+Headline assertion (reproduced in the CI smoke): at the HIGHEST offered
+load, ich-adaptive's p99 end-to-end latency must not exceed fcfs-static's,
+for every sweep seed. Writes `BENCH_serve.json` at the repo root so future
+PRs have a recorded serving trajectory to regress against.
+
+Run standalone:
+
+  PYTHONPATH=src python -m benchmarks.bench_serve
+  PYTHONPATH=src python -m benchmarks.bench_serve --fast
+
+or through the driver: PYTHONPATH=src python -m benchmarks.run --bench serve
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+from pathlib import Path
+
+from repro.serve.batcher import (ContinuousBatcher, SimBackend, SimClock,
+                                 StepCostModel, make_request_factory)
+from repro.serve.loadgen import LengthDist, OpenPoissonLoadGen
+from repro.serve.policies import FCFSStatic, IChAdaptive, RoundRobin
+from repro.serve.queue import AdmissionQueue
+
+ROOT = Path(__file__).resolve().parent.parent
+
+RATES = (10.0, 30.0, 60.0)       # offered load, requests/s (low/mid/high)
+SEEDS = (0, 1, 2, 3, 4)          # arrival-trace seeds
+N_ARRIVALS = 80
+N_NEW = 8                        # decode budget per request
+MAX_RUNNING = 8                  # continuous-batch width
+COST_SEED = 2                    # StepCostModel jitter stream
+SLO_DEADLINE_S = 2.0             # the SLO section's per-request budget
+
+
+def make_policies(chunk: int = 64) -> list:
+    return [FCFSStatic(chunk=chunk), RoundRobin(chunk=chunk),
+            IChAdaptive()]
+
+
+def load_gen(rate: float, seed: int, deadline_s=None) -> OpenPoissonLoadGen:
+    """Heavy-tailed prompts (zipf alpha=1.4 over [16, 2048], the
+    tests/_paper_grid.py family shape): most prompts are short, a few are
+    monsters — the regime where chunk-size and target-selection policy
+    decide the tail."""
+    return OpenPoissonLoadGen(
+        rate,
+        prompt_lens=LengthDist("zipf", 16, 2048, alpha=1.4),
+        output_lens=LengthDist("fixed", N_NEW, N_NEW),
+        deadline_s=deadline_s, seed=seed)
+
+
+def run_one(policy, rate: float, seed: int, deadline_s=None) -> dict:
+    gen = load_gen(rate, seed, deadline_s)
+    b = ContinuousBatcher(
+        policy,
+        queue=AdmissionQueue(max_pending=4 * N_ARRIVALS,
+                             max_running=MAX_RUNNING),
+        backend=SimBackend(StepCostModel(seed=COST_SEED)),
+        clock=SimClock())
+    m = b.run(gen.arrivals(N_ARRIVALS),
+              make_request=make_request_factory(gen, vocab_size=512))
+    s = m.summary()
+    return {
+        "policy": policy.name, "rate": rate, "seed": seed,
+        "deadline_s": deadline_s,
+        "ttft_p50": s["ttft"]["p50"], "ttft_p99": s["ttft"]["p99"],
+        "e2e_p50": s["e2e"]["p50"], "e2e_p99": s["e2e"]["p99"],
+        "per_token_p99": s["per_token"]["p99"],
+        "goodput_tok_s": s["goodput_tok_s"],
+        "n_completed": s["n_completed"], "n_degraded": s["n_degraded"],
+        "n_shed_admission": s["n_shed_admission"],
+        "n_tokens_shed": s["n_tokens_shed"],
+        "elapsed_s": s["elapsed_s"],
+    }
+
+
+def main(*, rates=RATES, seeds=SEEDS, out_path=None) -> dict:
+    rates = tuple(sorted(rates))
+    report = {
+        "host": platform.node(), "python": platform.python_version(),
+        "config": {"rates": list(rates), "seeds": list(seeds),
+                   "n_arrivals": N_ARRIVALS, "n_new": N_NEW,
+                   "max_running": MAX_RUNNING, "cost_seed": COST_SEED,
+                   "prompt_lens": "zipf(16, 2048, alpha=1.4)"},
+        "sweep": [], "slo": [],
+    }
+
+    # ---- tail latency vs offered load (no deadlines: pure queueing) ----
+    for rate in rates:
+        for seed in seeds:
+            for pol in make_policies():
+                row = run_one(pol, rate, seed)
+                report["sweep"].append(row)
+                print(f"serve,{row['policy']},rate={rate:g},seed={seed},"
+                      f"ttft_p99={row['ttft_p99']:.3f},"
+                      f"e2e_p99={row['e2e_p99']:.3f},"
+                      f"goodput={row['goodput_tok_s']:.1f}")
+
+    # ---- headline claim: adaptive beats the static baseline's tail at
+    #      the highest offered load, on every seed ----
+    top = rates[-1]
+    failures = []
+    for seed in seeds:
+        by_pol = {r["policy"]: r for r in report["sweep"]
+                  if r["rate"] == top and r["seed"] == seed}
+        ich, fcfs = by_pol["ich-adaptive"], by_pol["fcfs-static"]
+        margin = 1.0 - ich["e2e_p99"] / fcfs["e2e_p99"]
+        print(f"claim,rate={top:g},seed={seed},"
+              f"ich_p99={ich['e2e_p99']:.3f},fcfs_p99={fcfs['e2e_p99']:.3f},"
+              f"margin={100 * margin:.1f}%")
+        if ich["e2e_p99"] > fcfs["e2e_p99"]:
+            failures.append((seed, ich["e2e_p99"], fcfs["e2e_p99"]))
+    report["claim"] = {
+        "rate": top,
+        "ok": not failures,
+        "text": "ich-adaptive p99 e2e <= fcfs-static p99 e2e at top load",
+    }
+
+    # ---- SLO section: same top load with a deadline, goodput + shed ----
+    for pol in make_policies():
+        row = run_one(pol, top, seeds[0], deadline_s=SLO_DEADLINE_S)
+        report["slo"].append(row)
+        print(f"slo,{row['policy']},rate={top:g},"
+              f"deadline={SLO_DEADLINE_S:g}s,"
+              f"goodput={row['goodput_tok_s']:.1f},"
+              f"n_degraded={row['n_degraded']},"
+              f"n_tokens_shed={row['n_tokens_shed']}")
+
+    out_path = Path(out_path) if out_path else ROOT / "BENCH_serve.json"
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path}")
+
+    if failures:
+        raise SystemExit(
+            "serving claim FAILED: ich-adaptive p99 e2e > fcfs-static at "
+            f"rate={top}: " + ", ".join(
+                f"seed={s} ({a:.3f} > {b:.3f})" for s, a, b in failures))
+    print(f"# claim OK at rate={top:g}: ich-adaptive p99 e2e <= "
+          f"fcfs-static on all {len(seeds)} seeds")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="single-seed smoke (claim still asserted)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_serve.json)")
+    args = ap.parse_args()
+    main(seeds=(SEEDS[0],) if args.fast else SEEDS, out_path=args.out)

@@ -487,6 +487,103 @@ def _prefill_encdec(cfg, params, x, enc_out, dist):
                "cross": {"k": ys["ck"], "v": ys["cv"]}}
 
 
+def extend_cache_specs_ok(cfg) -> bool:
+    """True when `prefill_extend` supports this family (stacked attention
+    segments whose cache is per-segment (L,B,S,Hkv,dh) K/V)."""
+    return cfg.family in ("dense", "vlm", "moe")
+
+
+def empty_extend_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Zeroed per-segment K/V caches sized for an incremental prefill of
+    exactly `seq` tokens. Sizing the cache to the PROMPT length (not
+    max_seq) is what makes chunked extension bit-identical to a one-shot
+    prefill: the final chunk's attention reduces over the same Skv, with
+    the not-yet-written tail excluded by the causal mask (scores at
+    NEG_INF underflow to exact 0.0 weight)."""
+    hkv, dh = cfg.n_kv_heads, cfg.dh
+    return [{"k": jnp.zeros((cnt, batch, seq, hkv, dh), dtype),
+             "v": jnp.zeros((cnt, batch, seq, hkv, dh), dtype)}
+            for _, cnt in segments_of(cfg)]
+
+
+def prefill_extend(cfg, params, tokens, cache, done, cap_scales=None, *,
+                   dist=None, dtype=jnp.bfloat16):
+    """Incremental chunked prefill: run ONLY the new chunk against the
+    growing cache — O(chunk * context) work per chunk instead of the
+    O(prefix^2) of re-running the whole prefix every chunk.
+
+    `tokens` is the chunk (B, C) starting at absolute position `done`
+    (scalar, may be traced); `cache` holds the previous chunks' K/V in
+    positions [0, done) of per-segment stacked (L, B, S, Hkv, dh) buffers
+    (see `empty_extend_cache`). Returns (last-token logits, new cache).
+
+    Bit-identity with `prefill` of the full prompt: every per-position
+    computation (embed, norms, q/k/v projections, the attention einsum,
+    MLP/MoE rows) is a row-wise function of that position's values, so a
+    chunk's rows match the full run's rows exactly; the attention softmax
+    reduces over the same cache-length Skv with identical masked entries.
+    MoE layers dispatch dropless (per-token, no cross-token capacity
+    competition) exactly like `prefill`. Only text-token families with
+    stacked segments are supported (`extend_cache_specs_ok`); hybrid/ssm
+    recurrent state and encoder caches don't extend this way.
+    """
+    if not extend_cache_specs_ok(cfg):
+        raise NotImplementedError(
+            f"prefill_extend supports stacked attention families, "
+            f"not {cfg.family!r}")
+    B, C = tokens.shape
+    x = L.embed_tokens(cfg, params["embed"], tokens).astype(dtype)
+    if cfg.rope_theta == 0.0 and "pos" in params["embed"]:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["embed"]["pos"], done, C, 0)[None].astype(dtype)
+    positions = done + jnp.arange(C)
+
+    new_cache = []
+    moe_i = 0
+    for seg_idx, (kind, cnt) in enumerate(segments_of(cfg)):
+        stacked = params["segments"][seg_idx]
+        cap_seg = None
+        if kind == "moe":
+            cap_seg = cap_scales[moe_i:moe_i + cnt]
+            moe_i += cnt
+
+        def body(x, xs, kind=kind):
+            p_layer = xs["p"]
+            q, k1, v1 = A._qkv(cfg, p_layer["attn"],
+                               A_norm(cfg, p_layer["ln1"], x))
+            if cfg.rope_theta > 0:
+                cos, sin = L.rope_freqs(positions, cfg.dh, cfg.rope_theta)
+                q = L.apply_rope(q, cos, sin)
+                k1 = L.apply_rope(k1, cos, sin)
+            ck = jax.lax.dynamic_update_slice(
+                xs["k"], k1.astype(xs["k"].dtype), (0, done, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                xs["v"], v1.astype(xs["v"].dtype), (0, done, 0, 0))
+            h = A.full_attention(q, ck, cv, causal=True, q_offset=done)
+            h = h.reshape(B, C, cfg.n_heads * cfg.dh) \
+                @ p_layer["attn"]["wo"].astype(x.dtype)
+            x = x + h
+            xin = A_norm(cfg, p_layer["ln2"], x)
+            if kind == "moe":
+                h, _ = MOE.apply_moe(cfg, p_layer["moe"], xin, xs["cap"],
+                                     dist=dist, dropless=True)
+            else:
+                h = L.apply_mlp(cfg, p_layer["mlp"], xin)
+            x = x + h
+            return _constrain(x, dist), {"k": ck, "v": cv}
+
+        xs_in = {"p": stacked, "k": cache[seg_idx]["k"],
+                 "v": cache[seg_idx]["v"]}
+        if cap_seg is not None:
+            xs_in["cap"] = cap_seg
+        x, ys = jax.lax.scan(body, x, xs_in)
+        new_cache.append(ys)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x[:, -1])
+    return logits, new_cache
+
+
 def decode_step(cfg, params, tokens, cache, pos, cap_scales=None, *,
                 dist=None, dtype=jnp.bfloat16):
     """One decode step. tokens (B,1) int32; pos: scalar int32 (current write

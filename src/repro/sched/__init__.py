@@ -41,6 +41,7 @@ _LAZY = {
     "ExplicitCosts": "costs",
     "NnzCosts": "costs",
     "RefinedCosts": "costs",
+    "RemainingTokensCosts": "costs",
     "as_cost_provider": "costs",
     # MoE dispatch planning (sched/moe.py, DESIGN.md §2.8)
     "DispatchPlan": "moe",

@@ -38,7 +38,8 @@ import numpy as np
 from repro.core.tiling import pack_csr
 
 from .api import Schedule
-from .costs import DegreeCosts, ExpertLoadCosts, ExplicitCosts, NnzCosts
+from .costs import (DegreeCosts, ExpertLoadCosts, ExplicitCosts, NnzCosts,
+                    RemainingTokensCosts)
 from .registry import register
 
 
@@ -297,3 +298,14 @@ register(
     build=MoeDispatchOp,
     doc="MoE expert FFN over a dispatch plan (sched/moe.py); input "
         "(DispatchPlan); cost = per-expert kept token load.")
+register(
+    "serve-prefill",
+    costs=lambda remaining: RemainingTokensCosts(
+        np.asarray(remaining, np.int64)),
+    # there is no kernel here: the "op" IS the schedule — the continuous
+    # batcher (serve/batcher.py) consumes its cost estimates and tile
+    # order to pick the next prefill target, and routes measured step
+    # wall-clock back through Schedule.observe/refine (DESIGN.md §2.10)
+    build=lambda schedule, remaining: schedule,
+    doc="Continuous-batching prefill scheduling; input (per-request "
+        "remaining prompt token counts); cost = remaining tokens.")

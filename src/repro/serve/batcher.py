@@ -1,0 +1,315 @@
+"""The continuous batcher: interleaved decode + chunked prefill per step.
+
+One engine step (Sarathi-style continuous batching) assembles
+
+    [ one decode token for EVERY running decode stream ]
+  + [ one prefill chunk for ONE policy-chosen stream  ]
+
+so decode latency stays bounded while prefills make progress. WHICH
+stream prefills and HOW LARGE the chunk is are the dispatch policy's
+calls (serve/policies.py); the `ich-adaptive` policy routes them through
+the `sched` facade with per-request cost = remaining prompt tokens,
+refined each step from the measured step wall-clock.
+
+Two execution backends behind one `step_plan` contract:
+
+* `SimBackend` — no model, a seeded `StepCostModel` prices each step
+  (fixed dispatch overhead + per-decode-token + context-dependent
+  per-prefill-token + lognormal jitter) and a `SimClock` advances by it.
+  Bit-deterministic: CI and benchmarks/bench_serve.py sweep offered load
+  on this backend with zero machine noise.
+* `EngineBackend` — the real `serve.engine.Engine` under a `WallClock`;
+  each request owns its KV cache and the step executes per-request
+  (B=1), so interleaving is bit-identical to serial execution
+  (tests/test_serve_batch.py).
+
+Faults: a PR 7 `FaultPlan`'s stalls apply to the batcher loop as worker
+0 — a pending stall at a step boundary adds its duration to that step's
+clock, and deadline handling must DEGRADE the affected requests (shed
+remaining decode, keep the prefix) rather than blow their SLOs silently
+(tests/test_serve_slo_chaos.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..robust.faults import FaultClock, FaultPlan
+from .loadgen import Arrival, OpenPoissonLoadGen
+from .metrics import ServeMetrics
+from .policies import DispatchPolicy, StepPlan
+from .queue import AdmissionQueue, Request, RequestState
+
+
+# --------------------------------------------------------------------- clocks
+class WallClock:
+    """Real time (monotonic)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def advance(self, dt: float) -> None:  # wall time advances itself
+        pass
+
+
+class SimClock:
+    """Simulated serving clock: starts at 0, advances only when told."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self._t += float(dt)
+
+
+# ----------------------------------------------------------------- cost model
+@dataclasses.dataclass(frozen=True)
+class StepCostModel:
+    """Prices one batched engine step for the simulated backend.
+
+    seconds = overhead
+            + n_decode * decode_token_s
+            + chunk * prefill_token_s * (1 + ctx / ctx_scale)
+            + lognormal jitter (seeded per step)
+
+    The context term makes LATE chunks of a long prompt cost more per
+    token than early ones (attention over the growing KV prefix) — the
+    nonuniformity the iCh divisor and the cost refiner exist to track.
+    """
+
+    overhead_s: float = 2e-3
+    decode_token_s: float = 2e-4
+    prefill_token_s: float = 5e-5
+    ctx_scale: float = 512.0
+    jitter_sigma: float = 0.10
+    seed: int = 0
+
+    def step_seconds(self, plan: StepPlan, step_idx: int) -> float:
+        cost = self.overhead_s + plan.n_decode * self.decode_token_s
+        if plan.prefill is not None and plan.prefill_chunk > 0:
+            ctx = plan.prefill.prefill_done
+            cost += (plan.prefill_chunk * self.prefill_token_s
+                     * (1.0 + ctx / self.ctx_scale))
+        if self.jitter_sigma > 0:
+            rng = np.random.default_rng((self.seed << 24) + step_idx)
+            cost *= float(rng.lognormal(0.0, self.jitter_sigma))
+        return cost
+
+
+# ------------------------------------------------------------------- backends
+class SimBackend:
+    """Advance request state logically; a `StepCostModel` prices the step.
+
+    Generated token ids are a deterministic function of (req_id, position)
+    so interleaving order can never change outputs — the simulated twin of
+    the real backend's bit-identity property."""
+
+    def __init__(self, cost_model: Optional[StepCostModel] = None):
+        self.cost_model = cost_model if cost_model is not None \
+            else StepCostModel()
+        self.wall_clock = False
+
+    def execute(self, plan: StepPlan, step_idx: int) -> float:
+        dt = self.cost_model.step_seconds(plan, step_idx)
+        for st in plan.decode:
+            st.out_tokens.append(
+                int((st.request.req_id * 7919 + len(st.out_tokens)) % 251))
+        if plan.prefill is not None and plan.prefill_chunk > 0:
+            st = plan.prefill
+            st.prefill_done += plan.prefill_chunk
+            if st.remaining_prefill == 0:
+                # prefill's final logits yield the first generated token
+                st.out_tokens.append(int((st.request.req_id * 7919) % 251))
+        return dt
+
+
+class EngineBackend:
+    """Execute the plan on the real `serve.engine.Engine`, one request at
+    a time (B=1): each `RequestState` owns its KV cache and iCh band, so
+    a step's work is a pure function of per-request state and interleaved
+    execution is bit-identical to running the requests serially."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.wall_clock = True
+
+    def execute(self, plan: StepPlan, step_idx: int) -> float:
+        t0 = time.monotonic()
+        for st in plan.decode:
+            self.engine.decode_one(st)
+        if plan.prefill is not None and plan.prefill_chunk > 0:
+            self.engine.prefill_chunk_step(plan.prefill, plan.prefill_chunk)
+        return time.monotonic() - t0
+
+
+# ------------------------------------------------------------------- batcher
+class ContinuousBatcher:
+    """Open-loop serving driver: admission queue + policy + backend.
+
+    `run(arrivals, ...)` releases requests at their arrival stamps (the
+    open loop: arrivals never wait for completions, so overload shows up
+    as backlog and tail latency, not reduced offered load), steps the
+    engine until drained, and accounts TTFT / per-token / e2e latency
+    into `ServeMetrics`.
+    """
+
+    def __init__(self, policy: DispatchPolicy, *,
+                 queue: Optional[AdmissionQueue] = None,
+                 backend=None, clock=None,
+                 faults: Optional[FaultPlan] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.policy = policy
+        self.queue = queue if queue is not None else AdmissionQueue()
+        self.backend = backend if backend is not None else SimBackend()
+        if clock is None:
+            clock = WallClock() if getattr(self.backend, "wall_clock",
+                                           False) else SimClock()
+        self.clock = clock
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.fault_clock = (FaultClock(faults, 1)
+                            if faults is not None else None)
+        self.step_idx = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request) -> Optional[RequestState]:
+        self.metrics.n_arrived += 1
+        st = self.queue.submit(req)
+        if st is None:
+            self.metrics.n_shed_admission += 1
+            self.metrics.n_tokens_shed += req.n_new
+        else:
+            self.metrics.n_admitted += 1
+        return st
+
+    def _shed_expired(self, now: float) -> None:
+        """Deadline enforcement at step boundaries: a running request past
+        its SLO budget sheds its remaining decode steps and finalizes
+        DEGRADED — the per-request PR 7 contract (prefix kept, n_shed
+        counted, never an exception)."""
+        for st in list(self.queue.running):
+            if not st.past_deadline(now):
+                continue
+            shed = (st.remaining_decode if st.remaining_prefill == 0
+                    else st.request.n_new - len(st.out_tokens))
+            if shed > 0:
+                st.degraded = True
+                st.n_shed = shed
+                self.metrics.n_degraded += 1
+                self.metrics.n_tokens_shed += shed
+            self._finalize(st, now)
+
+    def _finalize(self, st: RequestState, now: float) -> None:
+        self.queue.finish(st, now)
+        self.metrics.n_completed += 1
+        self.metrics.n_tokens_out += len(st.out_tokens)
+        if st.t_first_token is not None:
+            self.metrics.ttft.record(
+                st.t_first_token - st.request.t_arrival)
+        self.metrics.e2e.record(now - st.request.t_arrival)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One engine step; returns False when there was nothing to do."""
+        now = self.clock.now()
+        self.queue.admit(now)
+        self._shed_expired(now)
+        plan = self.policy.choose(self.queue, now)
+        if plan.prefill is None and not plan.decode:
+            return False
+        prefill_st = plan.prefill
+        n_out_before = {id(st): len(st.out_tokens) for st in plan.decode}
+        dt = self.backend.execute(plan, self.step_idx)
+        # stalls from a PR 7 FaultPlan hit the batcher loop as worker 0:
+        # the stall's duration lands on this step's clock, and the
+        # deadline check at the NEXT boundary degrades what it blew
+        if self.fault_clock is not None:
+            self.fault_clock.chunks_done[0] += 1
+            stall = self.fault_clock.pending_stall(0)
+            if stall is not None:
+                dt += stall.duration
+        self.clock.advance(dt)
+        self.step_idx += 1
+        now = self.clock.now()
+        # ---- account decode tokens ----
+        for st in plan.decode:
+            if len(st.out_tokens) > n_out_before[id(st)]:
+                if st.t_last_token is not None:
+                    self.metrics.per_token.record(now - st.t_last_token)
+                st.t_last_token = now
+                if st.t_first_token is None:  # decode-started-first stream
+                    st.t_first_token = now
+        # ---- account the prefill chunk ----
+        if prefill_st is not None and plan.prefill_chunk > 0:
+            prefill_st.chunk_log.append(
+                {"chunk": plan.prefill_chunk, "dt": dt, "d": prefill_st.d})
+            if prefill_st.remaining_prefill == 0 and prefill_st.out_tokens:
+                # prefill completed this step: its final logits produced
+                # the request's first token
+                prefill_st.t_first_token = now
+                prefill_st.t_last_token = now
+        self.policy.observe(plan, dt)
+        # ---- retire finished streams ----
+        for st in list(self.queue.running):
+            if (st.remaining_prefill == 0
+                    and len(st.out_tokens) >= st.request.n_new):
+                self._finalize(st, now)
+        return True
+
+    # ------------------------------------------------------------------ run
+    def run(self, arrivals: list, *,
+            make_request: Callable[[Arrival], Request],
+            max_steps: int = 100_000) -> ServeMetrics:
+        """Drive the full open-loop trace to completion.
+
+        `arrivals` are released when the serving clock reaches their
+        stamp; when the queue is idle but arrivals remain, the clock
+        jumps to the next stamp (simulated clock) or sleeps (wall clock).
+        """
+        pending = sorted(arrivals, key=lambda a: (a.t, a.req_id))
+        i = 0
+        t_start = self.clock.now()
+        for _ in range(max_steps):
+            now = self.clock.now()
+            while i < len(pending) and pending[i].t + t_start <= now:
+                # shift the arrival onto the serving clock so latencies
+                # and deadlines measure from the actual release stamp
+                a = dataclasses.replace(pending[i], t=pending[i].t + t_start)
+                self.submit(make_request(a))
+                i += 1
+            if not self.step():
+                if i >= len(pending):
+                    if self.queue.n_outstanding == 0:
+                        break
+                    # outstanding but unsteppable should be impossible:
+                    # admit() promotes whenever a slot is free
+                    self.queue.admit(now)
+                    continue
+                gap = pending[i].t + t_start - now
+                if isinstance(self.clock, SimClock):
+                    self.clock.advance(gap)
+                else:  # pragma: no cover - wall-clock idle
+                    time.sleep(min(gap, 0.05))
+        self.metrics.t_elapsed = self.clock.now() - t_start
+        return self.metrics
+
+
+def make_request_factory(gen: OpenPoissonLoadGen, *,
+                         vocab_size: int) -> Callable[[Arrival], Request]:
+    """Arrival -> Request using the load generator's seeded prompt
+    tokens; the factory bench_serve and the quickstart share."""
+
+    def make(a: Arrival) -> Request:
+        return Request(req_id=a.req_id,
+                       tokens=gen.prompt_tokens(a, vocab_size),
+                       n_new=a.n_new, deadline_s=a.deadline_s,
+                       t_arrival=a.t)
+
+    return make

@@ -9,6 +9,23 @@ throughput against the running mean band (mu +- eps*mu, paper eqs. 1-8) and
 adapts the divisor d exactly like adapt_d — slow chunks (cache pressure,
 long context) grow the chunk to amortize dispatch, fast chunks shrink it to
 leave room for interleaved decode ("stealable" slots).
+
+Chunked prefill is INCREMENTAL for stacked-segment families (dense / vlm /
+moe): each chunk feeds only its own tokens through `models.prefill_extend`
+against the growing KV cache — O(chunk * context) per chunk instead of
+re-running the whole prefix — and stays bit-identical to a one-shot
+prefill because the cache is sized to the exact prompt length (see
+`empty_extend_cache`). Families whose state doesn't extend this way
+(encdec / hybrid / ssm) fall back to re-running the prefix.
+
+Two usage surfaces:
+
+* `generate(prompts, ...)` — the single-request path with the engine-level
+  iCh band (`self.d` / `self.ks`) and the PR 7 deadline contract;
+* `start_request` / `prefill_chunk_step` / `decode_one` — the per-request
+  primitives the continuous batcher (serve/batcher.py) drives, operating
+  on `RequestState` so each request carries its OWN iCh band and cache
+  (two interleaved requests can no longer pollute each other's divisor).
 """
 from __future__ import annotations
 
@@ -23,6 +40,7 @@ import numpy as np
 from ..core import welford as W
 from ..sched.defaults import ICH_EPS
 from ..models import model as M
+from .queue import RequestState
 
 
 @dataclasses.dataclass
@@ -34,8 +52,11 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, cfg, params, ecfg: EngineConfig = EngineConfig()):
-        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+    def __init__(self, cfg, params, ecfg: Optional[EngineConfig] = None):
+        # default constructed per instance: a shared EngineConfig default
+        # would alias mutable config across engines
+        self.cfg, self.params = cfg, params
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
         caps = jnp.ones((M.n_moe_layers(cfg), max(cfg.n_experts, 1))) \
             if cfg.moe else None
         self._prefill = jax.jit(
@@ -43,9 +64,16 @@ class Engine:
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos, caps,
                                                dtype=jnp.float32))
+        if M.extend_cache_specs_ok(cfg):
+            self._extend = jax.jit(
+                lambda p, t, c, done: M.prefill_extend(
+                    cfg, p, t, c, done, caps, dtype=jnp.float32))
+        else:
+            self._extend = None
         # iCh state: divisor d + completed-token counters per "worker"
-        # (here: per prefill stream)
-        self.d = ecfg.init_divisor
+        # (here: per prefill stream) — the single-request surface; the
+        # batcher path keeps this state per request on RequestState
+        self.d = self.ecfg.init_divisor
         self.ks: list[float] = []
 
     # ---------------- iCh chunked prefill ----------------
@@ -65,20 +93,68 @@ class Engine:
         B, S = tokens.shape
         log = []
         done = 0
-        cache = None
         logits = None
+        incremental = self._extend is not None
+        cache = (M.empty_extend_cache(self.cfg, B, S, dtype=jnp.float32)
+                 if incremental else None)
         while done < S:
             c = self._next_chunk(S - done)
             t0 = time.perf_counter()
-            chunk = jnp.asarray(tokens[:, : done + c])  # re-prefill prefix
-            # simple engine: re-run prefix (prefix caching is the obvious
-            # next optimization; chunk accounting is what iCh needs)
-            logits, cache = self._prefill(self.params, {"tokens": chunk})
+            if incremental:
+                # feed ONLY the chunk to the growing cache: O(chunk) work
+                logits, cache = self._extend(
+                    self.params, jnp.asarray(tokens[:, done: done + c]),
+                    cache, done)
+            else:
+                # recurrent/encoder families: re-run the prefix
+                chunk = jnp.asarray(tokens[:, : done + c])
+                logits, cache = self._prefill(self.params, {"tokens": chunk})
             dt = time.perf_counter() - t0
             self._adapt(c * B, dt)
             log.append({"chunk": c, "dt": dt, "d": self.d})
             done += c
         return logits, cache, log
+
+    # ---------------- per-request primitives (batcher surface) ----------------
+    def start_request(self, st: RequestState) -> None:
+        """Allocate the request's incremental prefill cache (cache sized to
+        the exact prompt, the bit-identity requirement)."""
+        if self._extend is None:
+            raise NotImplementedError(
+                f"continuous batching needs prefill_extend; family "
+                f"{self.cfg.family!r} caches don't extend incrementally")
+        st.cache = M.empty_extend_cache(self.cfg, 1, st.prompt_len,
+                                        dtype=jnp.float32)
+
+    def prefill_chunk_step(self, st: RequestState, chunk: int) -> None:
+        """Advance one request's prefill by `chunk` tokens. Mechanical: the
+        caller (batcher + policy) owns timing, chunk logs, and divisor
+        adaptation. On completion, pads the cache to max_seq and emits the
+        request's first token (the prefill argmax)."""
+        if st.cache is None:
+            self.start_request(st)
+        done = st.prefill_done
+        chunk = min(chunk, st.remaining_prefill)
+        if chunk <= 0:
+            return
+        toks = jnp.asarray(st.request.tokens[:, done: done + chunk])
+        logits, st.cache = self._extend(self.params, toks, st.cache, done)
+        st.prefill_done = done + chunk
+        st.last_logits = logits
+        if st.remaining_prefill == 0:
+            st.cache = self._pad_cache(st.cache, st.prompt_len)
+            st.out_tokens.append(
+                int(jnp.argmax(logits[0], -1)))
+
+    def decode_one(self, st: RequestState) -> None:
+        """One greedy decode token for a stream that finished prefill."""
+        if not st.out_tokens:
+            raise ValueError("decode_one before prefill produced a token")
+        pos = st.prompt_len + len(st.out_tokens) - 1
+        tok = jnp.asarray([[st.out_tokens[-1]]], jnp.int32)
+        logits, st.cache = self._decode(self.params, tok, st.cache, pos)
+        st.out_tokens.append(int(jnp.argmax(logits[0], -1)))
+        st.last_logits = logits
 
     # ---------------- decode ----------------
     def generate(self, prompts: np.ndarray, n_new: int = 16,

@@ -1,0 +1,202 @@
+"""Admission-controlled request queue: pending/running/done lifecycle.
+
+The continuous batcher (serve/batcher.py) owns one `AdmissionQueue`.
+Requests flow
+
+    submit() -> PENDING -> admit() -> RUNNING -> DONE
+           \\-> shed (bounded queue overflow, deterministic)
+
+and every request carries its own `RequestState`: the per-request iCh
+divisor band (``d``, ``ks`` — moved OFF the engine singleton, so two
+interleaved requests can no longer pollute each other's band), the prefill
+cursor, the KV cache, the generated tokens, and the latency timestamps the
+metrics layer reads. `deadline_s` is the per-request SLO budget from PR 7
+(DESIGN.md §2.9): when the serving clock overruns it mid-decode the
+batcher sheds the remaining steps and finalizes the request `degraded`
+with the same ``degraded``/``n_shed`` contract `Engine.generate` exposes.
+
+Numpy-only: no jax import, the queue works identically under the real
+engine and the simulated-clock backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import numpy as np
+
+PENDING, RUNNING, DONE, SHED = "pending", "running", "done", "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """What the client submitted (immutable)."""
+
+    req_id: int
+    tokens: np.ndarray           # (1, S) int prompt
+    n_new: int                   # decode budget
+    deadline_s: Optional[float] = None   # e2e SLO budget from arrival
+    t_arrival: float = 0.0
+
+    def __post_init__(self):
+        t = np.asarray(self.tokens)
+        if t.ndim == 1:
+            t = t[None, :]
+        if t.ndim != 2 or t.shape[0] != 1 or t.shape[1] < 1:
+            raise ValueError(
+                f"prompt must be (1, S>=1) or (S>=1,), got {t.shape}")
+        object.__setattr__(self, "tokens", t)
+        if self.n_new < 1:
+            raise ValueError(f"n_new must be >= 1, got {self.n_new}")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[1])
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Per-request runtime state (one per admitted request).
+
+    The iCh fields are the paper's per-worker (d_i, k_i) pair scoped to the
+    request's prefill stream: `d` divides the remaining prompt into the
+    next chunk, `ks` is the measured chunk-throughput history the band
+    classifies against. `cache`/`last_logits` are opaque to the queue (jax
+    arrays under the real engine, None under the simulated backend).
+    """
+
+    request: Request
+    status: str = PENDING
+    # ---- iCh chunk state (per request, NOT per engine) ----
+    d: float = 4.0
+    ks: list = dataclasses.field(default_factory=list)
+    chunk_log: list = dataclasses.field(default_factory=list)
+    # ---- prefill / decode cursors ----
+    prefill_done: int = 0
+    cache: Any = None
+    last_logits: Any = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    # ---- SLO outcome (PR 7 generate() contract, per request) ----
+    degraded: bool = False
+    n_shed: int = 0
+    # ---- timestamps (serving-clock seconds) ----
+    t_admit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    # ------------------------------------------------------------ progress
+    @property
+    def prompt_len(self) -> int:
+        return self.request.prompt_len
+
+    @property
+    def remaining_prefill(self) -> int:
+        return self.prompt_len - self.prefill_done
+
+    @property
+    def needs_prefill(self) -> bool:
+        return self.status == RUNNING and self.remaining_prefill > 0
+
+    @property
+    def decoding(self) -> bool:
+        return (self.status == RUNNING and self.remaining_prefill == 0
+                and len(self.out_tokens) < self.request.n_new)
+
+    @property
+    def remaining_decode(self) -> int:
+        return self.request.n_new - len(self.out_tokens)
+
+    @property
+    def deadline_at(self) -> Optional[float]:
+        if self.request.deadline_s is None:
+            return None
+        return self.request.t_arrival + self.request.deadline_s
+
+    def past_deadline(self, now: float) -> bool:
+        dl = self.deadline_at
+        return dl is not None and now > dl
+
+    def output(self) -> np.ndarray:
+        """(1, n_done) generated ids (empty (1, 0) before first token)."""
+        if not self.out_tokens:
+            return np.zeros((1, 0), dtype=np.int32)
+        return np.asarray(self.out_tokens, dtype=np.int32).reshape(1, -1)
+
+    def stats(self) -> dict:
+        """The per-request stats contract (`Engine.generate` superset)."""
+        return {"chunks": self.chunk_log, "d_final": self.d,
+                "degraded": self.degraded, "n_shed": self.n_shed,
+                "deadline_s": self.request.deadline_s,
+                "ttft": (None if self.t_first_token is None
+                         else self.t_first_token - self.request.t_arrival),
+                "e2e": (None if self.t_done is None
+                        else self.t_done - self.request.t_arrival)}
+
+
+class AdmissionQueue:
+    """Bounded pending queue + running set with deterministic shed.
+
+    `submit()` accepts a request into PENDING unless the queue already
+    holds `max_pending` requests — then the NEW request is shed
+    immediately (deterministic drop-tail: the same arrival trace always
+    sheds the same request ids, asserted in tests/test_serve_batch.py).
+    `admit()` promotes FCFS from PENDING to RUNNING up to `max_running`
+    concurrent requests (the continuous batch size).
+    """
+
+    def __init__(self, *, max_pending: int = 64, max_running: int = 8,
+                 init_divisor: float = 4.0):
+        if max_pending < 1 or max_running < 1:
+            raise ValueError("max_pending and max_running must be >= 1")
+        self.max_pending = int(max_pending)
+        self.max_running = int(max_running)
+        self.init_divisor = float(init_divisor)
+        self.pending: deque[RequestState] = deque()
+        self.running: list[RequestState] = []
+        self.done: list[RequestState] = []
+        self.shed: list[Request] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request) -> Optional[RequestState]:
+        """Queue a request; returns its state, or None when shed."""
+        if len(self.pending) >= self.max_pending:
+            self.shed.append(req)
+            return None
+        st = RequestState(request=req, d=self.init_divisor)
+        self.pending.append(st)
+        return st
+
+    def admit(self, now: float) -> list[RequestState]:
+        """Promote pending -> running (FCFS) up to `max_running`."""
+        admitted = []
+        while self.pending and len(self.running) < self.max_running:
+            st = self.pending.popleft()
+            st.status = RUNNING
+            st.t_admit = now
+            self.running.append(st)
+            admitted.append(st)
+        return admitted
+
+    def finish(self, st: RequestState, now: float) -> None:
+        """Move a running request to DONE (completed or degraded)."""
+        st.status = DONE
+        st.t_done = now
+        self.running.remove(st)
+        self.done.append(st)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_outstanding(self) -> int:
+        return len(self.pending) + len(self.running)
+
+    @property
+    def n_shed(self) -> int:
+        return len(self.shed)
+
+    def prefilling(self) -> list[RequestState]:
+        return [st for st in self.running if st.needs_prefill]
+
+    def decoding(self) -> list[RequestState]:
+        return [st for st in self.running if st.decoding]

@@ -58,6 +58,25 @@ class TestChunkedPrefill:
         assert all(rec["chunk"] >= 1 for rec in log)
         assert all(set(rec) == {"chunk", "dt", "d"} for rec in log)
 
+    def test_outputs_independent_of_chunk_count(self, tiny_model):
+        """Incremental prefill feeds each chunk into the growing cache
+        (O(chunk) work per chunk, engine no longer re-runs the prefix);
+        the final logits must be bit-identical however the prompt is cut.
+        Divisors 1/3/8 produce genuinely different chunk sequences."""
+        cfg, params = tiny_model
+        toks = prompts_for(cfg, B=2, S=24)
+        logits, counts = [], []
+        for d0 in (1.0, 3.0, 8.0):
+            eng = Engine(cfg, params,
+                         EngineConfig(max_seq=64, min_chunk=2,
+                                      init_divisor=d0))
+            lg, _, log = eng.prefill_chunked(toks)
+            logits.append(np.asarray(lg))
+            counts.append(len(log))
+        assert len(set(counts)) > 1  # the splits really differed
+        for lg in logits[1:]:
+            np.testing.assert_array_equal(lg, logits[0])
+
 
 # ------------------------------------------------ iCh divisor adaptation
 

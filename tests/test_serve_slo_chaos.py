@@ -1,0 +1,95 @@
+"""SLO chaos for the serving loop: a PR 7 `FaultPlan` stall hits the
+continuous batcher as worker 0, its duration lands on one step's serving
+clock, and every request the stall pushes past its deadline must DEGRADE
+(shed remaining decode, keep the emitted prefix, PR 7 contract fields) —
+never raise, never silently blow the SLO (DESIGN.md §2.9 / §2.10).
+
+Simulated backend + simulated clock: the whole scenario replays
+bit-identically from (FaultPlan seed, arrival seed, cost seed)."""
+import numpy as np
+import pytest
+
+from repro.robust.faults import FaultPlan, Stall
+from repro.serve.batcher import (ContinuousBatcher, SimBackend, SimClock,
+                                 StepCostModel, make_request_factory)
+from repro.serve.loadgen import LengthDist, OpenPoissonLoadGen
+from repro.serve.policies import FCFSStatic, IChAdaptive
+from repro.serve.queue import AdmissionQueue
+
+
+def run_trace(policy, *, faults=None, deadline_s=0.25, n=8, seed=21):
+    gen = OpenPoissonLoadGen(
+        200.0, prompt_lens=LengthDist("fixed", 128, 128),
+        output_lens=LengthDist("fixed", 6, 6),
+        deadline_s=deadline_s, seed=seed)
+    b = ContinuousBatcher(
+        policy,
+        queue=AdmissionQueue(max_running=4),
+        backend=SimBackend(StepCostModel(seed=1)),
+        clock=SimClock(), faults=faults)
+    m = b.run(gen.arrivals(n), make_request=make_request_factory(
+        gen, vocab_size=512))
+    return b, m
+
+
+STALL_PLAN = FaultPlan(seed=5, stalls=(Stall(0, after_chunks=3,
+                                             duration=0.5),))
+
+
+class TestStallDegradesNotBlows:
+    def test_baseline_meets_slo_without_faults(self):
+        """The deadline is calibrated to pass cleanly fault-free, so any
+        degradation in the stall run is attributable to the stall."""
+        b, m = run_trace(FCFSStatic(chunk=64))
+        assert m.n_degraded == 0
+        assert m.n_completed == 8
+
+    def test_stall_degrades_affected_requests(self):
+        """A 0.5 s stall against a 0.25 s SLO: requests in flight at the
+        stall step blow their budget and MUST come back degraded with the
+        prefix kept — the run itself completes every request."""
+        b, m = run_trace(FCFSStatic(chunk=64), faults=STALL_PLAN)
+        assert m.n_degraded > 0
+        assert m.n_completed == 8            # nothing lost, nothing raised
+        assert b.queue.n_outstanding == 0
+        for st in b.queue.done:
+            if st.degraded:
+                assert st.n_shed > 0
+                assert len(st.out_tokens) + st.n_shed == st.request.n_new
+                # emitted prefix survives (shed FUTURE work only)
+                assert st.out_tokens == [
+                    (st.request.req_id * 7919 + j) % 251
+                    for j in range(len(st.out_tokens))]
+                assert st.stats()["degraded"] is True
+            else:
+                assert st.n_shed == 0
+
+    def test_undisturbed_requests_keep_their_outputs(self):
+        """Requests that complete before the stall (or start after its
+        effect drains) match the fault-free run token-for-token."""
+        clean, _ = run_trace(FCFSStatic(chunk=64))
+        chaos, _ = run_trace(FCFSStatic(chunk=64), faults=STALL_PLAN)
+        clean_out = {st.request.req_id: st.out_tokens
+                     for st in clean.queue.done}
+        for st in chaos.queue.done:
+            full = clean_out[st.request.req_id]
+            assert st.out_tokens == full[:len(st.out_tokens)]
+
+    def test_chaos_replays_bit_identically(self):
+        runs = [run_trace(IChAdaptive(), faults=STALL_PLAN)[1].summary()
+                for _ in range(2)]
+        assert runs[0] == runs[1]
+
+    def test_stall_consumed_once(self):
+        """The plan's stall fires at exactly one step boundary; the
+        serving clock shows one stall-sized jump, not a per-step tax."""
+        clean, mc = run_trace(FCFSStatic(chunk=64))
+        chaos, mf = run_trace(FCFSStatic(chunk=64), faults=STALL_PLAN)
+        extra = mf.t_elapsed - mc.t_elapsed
+        assert extra == pytest.approx(0.5, rel=0.3)
+
+    def test_adaptive_policy_survives_chaos_too(self):
+        b, m = run_trace(IChAdaptive(), faults=STALL_PLAN)
+        assert m.n_completed == 8
+        assert b.queue.n_outstanding == 0
+        assert m.n_degraded > 0
