@@ -387,6 +387,89 @@ def bench_degradation(n: int, p: int = 4, seed: int = 100) -> dict:
     }
 
 
+def bench_recovery(n: int, p: int = 4, seed: int = 100) -> dict:
+    """Checkpoint-based reshard recovery vs steal-only reclaim
+    (DESIGN.md §2.11): kill k of p workers early, then finish the run
+    two ways from the SAME amount of completed work — PR 7's dynamic
+    steal-path reclaim (pays per-chunk steal/dispatch overheads for
+    every reclaimed item) vs re-lowering the incomplete chains onto the
+    p-k survivors from the checkpoint at the last superstep barrier
+    before the first death (barrier-time model: completed prefix +
+    re-execution, no per-chunk overheads). Asserted per row: reshard
+    inflation must not exceed steal inflation beyond the superstep
+    QUANTIZATION allowance — the checkpoint rounds each worker's credit
+    down to a completed block, losing at most one block of progress per
+    worker — so CI catches any reshard regression."""
+    from repro.core.policies import ich
+    from repro.core.simulator import simulate
+    from repro.robust import CheckpointLog, FaultPlan
+    from repro.sched import LoopScheduler
+
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(8, 13, n)
+    s = LoopScheduler(p=p, cache_size=0).schedule(sizes)
+    shards = s.shard()
+    tc = s.tile_cost()
+    B = s.superstep
+    clean_static = float(shards.worker_cost(tc).max())
+    clean_steal = simulate(s.costs, p, ich())
+    # per-worker cumulative cost at each superstep barrier
+    perm = shards.perm
+    step_cost = np.zeros((shards.p, shards.n_steps))
+    for w in range(shards.p):
+        for t in range(shards.n_steps):
+            tiles = perm[w, t * B:(t + 1) * B]
+            step_cost[w, t] = tc[tiles[tiles >= 0]].sum()
+    cum = np.cumsum(step_cost, axis=1)
+    quantum = float(step_cost.max()) / clean_static  # one block of credit
+    rows = []
+    for k in range(1, p):
+        plan_f = FaultPlan(seed=seed,
+                           deaths=tuple((w, 1) for w in range(k)))
+        faulty = simulate(s.costs, p, ich(), faults=plan_f,
+                          record_assignment=True)
+        steal_inflation = faulty.makespan / clean_steal.makespan
+        # the last consistent barrier before the first death: every dead
+        # worker had completed exactly its first chunk
+        t_c = min(float(s.costs[faulty.assignment == w].sum())
+                  for w in range(k))
+        log = CheckpointLog()
+        for w in range(p):
+            log.mark_through(w, int(np.searchsorted(cum[w], t_c,
+                                                    side="right")))
+        plan = s.reshard_survivors(dead=range(k), checkpoint=log)
+        again = s.reshard_survivors(
+            dead=range(k),
+            checkpoint=CheckpointLog.from_json(log.to_json()))
+        assert np.array_equal(plan.redo_blocks, again.redo_blocks), \
+            f"recovery replan diverged at k={k}"
+        mm = plan.makespan_model(tc)
+        inflation = mm["makespan"] / clean_static
+        assert inflation <= steal_inflation + quantum, (
+            f"k={k}: reshard inflation {inflation:.4f} exceeds the "
+            f"steal-only reclaim inflation {steal_inflation:.4f} beyond "
+            f"the one-block quantization allowance {quantum:.4f}")
+        rows.append({
+            "killed": k,
+            "blocks_redone": int(plan.redo_blocks.size),
+            "blocks_kept": int(plan.keep_blocks.size),
+            "t_done": mm["t_done"],
+            "t_redo": mm["t_redo"],
+            "makespan": mm["makespan"],
+            "inflation": inflation,
+            "steal_inflation": steal_inflation,
+        })
+    return {
+        "n_items": n, "p": p,
+        "workload": f"integers(8, 13), seed {seed}, deaths after 1 chunk, "
+                    f"checkpoint at the barrier before the first death",
+        "clean_static_makespan": clean_static,
+        "clean_steal_makespan": clean_steal.makespan,
+        "quantization_allowance": quantum,
+        "rows": rows,
+    }
+
+
 def _timed(fn, repeats: int = 3):
     import jax
     out = jax.block_until_ready(fn())  # trace + compile
@@ -550,6 +633,13 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
           f"clean_makespan={dg['clean_makespan']:.1f},"
           + ",".join(f"k{r['killed']}_inflation={r['inflation']:.3f}"
                      for r in dg["rows"]))
+    rc = bench_recovery(sizes[0])
+    report["recovery"] = rc
+    print(f"recovery,n={rc['n_items']},p={rc['p']},"
+          f"clean_static_makespan={rc['clean_static_makespan']:.1f},"
+          + ",".join(f"k{r['killed']}_inflation={r['inflation']:.3f}"
+                     f"(steal={r['steal_inflation']:.3f})"
+                     for r in rc["rows"]))
     if kernel_step:
         ks = bench_kernel_step(sizes[0])
         report["kernel_step_interpret"] = ks

@@ -129,13 +129,17 @@ class _Deque:
 
 
 def _attempt(body, i: int, retries: int, backoff_s: float,
-             stats: ExecStats, stats_lock) -> None:
+             stats: ExecStats, stats_lock, sleep_fn=None) -> None:
     """Run `body(i)` under the per-item retry budget: transient failures
     are re-attempted up to `retries` times with bounded exponential
     backoff; a still-failing item re-raises (and the supervisor aborts the
     run). Retrying per ITEM — not per chunk — is what keeps the
     exactly-once invariant: items before the failing one are never
-    re-executed."""
+    re-executed. `sleep_fn` replaces `time.sleep` for the backoff wait
+    (tests and simulated clocks pass a no-op / virtual sleep so retry
+    suites cost zero wall-clock)."""
+    if sleep_fn is None:
+        sleep_fn = time.sleep
     attempt = 0
     while True:
         try:
@@ -155,7 +159,7 @@ def _attempt(body, i: int, retries: int, backoff_s: float,
             delay = min(backoff_s * (2 ** (attempt - 1)),
                         RETRY_BACKOFF_CAP_S)
             if delay > 0:
-                time.sleep(delay)
+                sleep_fn(delay)
 
 
 def parallel_for(
@@ -170,6 +174,7 @@ def parallel_for(
     retries: int = 0,
     retry_backoff_s: float = 0.0,
     watchdog_s: Optional[float] = None,
+    sleep_fn: Optional[Callable[[float], None]] = None,
 ) -> ExecStats:
     """Run `body(i)` for i in [0, n) on `p` threads under `policy`.
 
@@ -189,6 +194,9 @@ def parallel_for(
     remains, which raises `FaultError`. Injected stalls sleep for their
     duration on threads; the deterministic driver logs them and charges
     one round-robin turn instead (turns, not wall time, are its clock).
+    `sleep_fn` replaces `time.sleep` for retry backoff AND injected stall
+    waits (pass a no-op to run chaos/retry suites at zero wall-clock
+    without changing the recorded fault logs).
     """
     stats = ExecStats()
     stats_lock = threading.Lock()
@@ -204,13 +212,15 @@ def parallel_for(
 
     if policy.kind == P.CENTRAL:
         _run_central(n, body, p, policy, stats, stats_lock, deterministic,
-                     fc=fc, retries=retries, backoff_s=retry_backoff_s)
+                     fc=fc, retries=retries, backoff_s=retry_backoff_s,
+                     sleep_fn=sleep_fn)
     else:
         if record_chunks:
             stats.steal_log = []
         _run_distributed(n, body, p, policy, stats, stats_lock, seed,
                          deterministic, fc=fc, retries=retries,
-                         backoff_s=retry_backoff_s, watchdog_s=watchdog_s)
+                         backoff_s=retry_backoff_s, watchdog_s=watchdog_s,
+                         sleep_fn=sleep_fn)
     return stats
 
 
@@ -218,7 +228,8 @@ def parallel_for(
 _RAN, _STOLE, _FAILED, _EMPTY, _DEAD, _STALLED = range(6)
 
 
-def _fault_gate(w, fc, dead, stats, stats_lock, deterministic) -> Optional[int]:
+def _fault_gate(w, fc, dead, stats, stats_lock, deterministic,
+                sleep_fn=None) -> Optional[int]:
     """The per-step fault clock check both families run at chunk
     boundaries: returns a step outcome when worker w dies/stalls/was
     already declared dead, else None (proceed to dispatch)."""
@@ -239,7 +250,7 @@ def _fault_gate(w, fc, dead, stats, stats_lock, deterministic) -> Optional[int]:
                 stats.fault_log.append(
                     ("stall", w, int(fc.chunks_done[w]), st.duration))
             if not deterministic:
-                time.sleep(st.duration)
+                (sleep_fn or time.sleep)(st.duration)
             return _STALLED
     if dead[w]:  # planned death or watchdog declaration
         return _DEAD
@@ -247,7 +258,7 @@ def _fault_gate(w, fc, dead, stats, stats_lock, deterministic) -> Optional[int]:
 
 
 def _run_central(n, body, p, policy, stats, stats_lock, deterministic=False,
-                 fc=None, retries=0, backoff_s=0.0):
+                 fc=None, retries=0, backoff_s=0.0, sleep_fn=None):
     pos = [0]
     tiles: Optional[list[tuple[int, int]]] = None
     if policy.law == "pretiled":
@@ -279,7 +290,8 @@ def _run_central(n, body, p, policy, stats, stats_lock, deterministic=False,
 
     def step(w: int) -> int:
         """One chunk grab + execution for (virtual) worker w."""
-        gate = _fault_gate(w, fc, dead, stats, stats_lock, deterministic)
+        gate = _fault_gate(w, fc, dead, stats, stats_lock, deterministic,
+                           sleep_fn)
         if gate is not None:
             return gate
         b, e = grab()
@@ -288,7 +300,8 @@ def _run_central(n, body, p, policy, stats, stats_lock, deterministic=False,
         record = stats.chunk_log is not None  # clock reads only when asked
         t0 = time.perf_counter() if record else 0.0
         for i in range(b, e):
-            _attempt(body, i, retries, backoff_s, stats, stats_lock)
+            _attempt(body, i, retries, backoff_s, stats, stats_lock,
+                     sleep_fn)
         if record:
             dt = time.perf_counter() - t0
         if fc is not None:
@@ -325,7 +338,7 @@ def _run_central(n, body, p, policy, stats, stats_lock, deterministic=False,
 
 def _run_distributed(n, body, p, policy, stats, stats_lock, seed,
                      deterministic=False, fc=None, retries=0, backoff_s=0.0,
-                     watchdog_s=None):
+                     watchdog_s=None, sleep_fn=None):
     bounds = np.linspace(0, n, p + 1).astype(np.int64)
     deques = [_Deque(int(bounds[i]), int(bounds[i + 1])) for i in range(p)]
     ks = np.zeros(p)
@@ -337,7 +350,8 @@ def _run_distributed(n, body, p, policy, stats, stats_lock, seed,
     def step(w: int) -> int:
         """One dispatch-or-steal attempt for worker w — the unit the
         threaded loop AND the deterministic round-robin driver share."""
-        gate = _fault_gate(w, fc, dead, stats, stats_lock, deterministic)
+        gate = _fault_gate(w, fc, dead, stats, stats_lock, deterministic,
+                           sleep_fn)
         if gate is not None:
             return gate
         heartbeat[w] = time.perf_counter()
@@ -351,7 +365,8 @@ def _run_distributed(n, body, p, policy, stats, stats_lock, seed,
             record = stats.chunk_log is not None
             t0 = time.perf_counter() if record else 0.0
             for i in range(b, e):
-                _attempt(body, i, retries, backoff_s, stats, stats_lock)
+                _attempt(body, i, retries, backoff_s, stats, stats_lock,
+                         sleep_fn)
             if record:
                 dt = time.perf_counter() - t0
             ks[w] += e - b

@@ -298,6 +298,31 @@ def tile_spans(item_id: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return first, last
 
 
+def block_chains(item_id: np.ndarray, block: int = 1) -> np.ndarray:
+    """(n_blocks,) chain id per `block`-tile superstep block: consecutive
+    blocks share a chain exactly when an item has segments on both sides of
+    their boundary (the cut is not item-closed). This is the merge step of
+    `partition_tiles`, exposed so recovery can reason at the same
+    granularity — a chain is the smallest unit that can move between
+    workers without breaking the one-worker-per-item fold order."""
+    T = int(item_id.shape[0])
+    blk = int(block)
+    if blk < 1:
+        raise ValueError(f"block must be positive, got {block}")
+    if T == 0:
+        return np.empty(0, np.int64)
+    first, last = tile_spans(item_id)
+    # cut between tiles t-1 and t is item-closed unless an item spans it
+    spans = (last[:-1] == first[1:]) & (first[1:] >= 0) & (last[:-1] >= 0)
+    if blk == 1:
+        merge = spans
+    else:
+        # block boundaries sit at tiles blk, 2*blk, ...: blocks b-1 and b
+        # merge when the tile-level cut there is not item-closed
+        merge = spans[blk - 1:T - 1:blk]
+    return np.concatenate([[0], np.cumsum(~merge)]).astype(np.int64)
+
+
 def partition_tiles(tile_cost: np.ndarray, item_id: np.ndarray,
                     p: int, block: int = 1) -> np.ndarray:
     """Cost-balanced (LPT) tile -> worker map, shape (T,) int32.
@@ -329,17 +354,8 @@ def partition_tiles(tile_cost: np.ndarray, item_id: np.ndarray,
         return np.empty(0, np.int32)
     if p == 1:
         return np.zeros(T, np.int32)
-    first, last = tile_spans(item_id)
-    # cut between tiles t-1 and t is item-closed unless an item spans it
-    spans = (last[:-1] == first[1:]) & (first[1:] >= 0) & (last[:-1] >= 0)
     n_blocks = -(-T // blk)
-    if blk == 1:
-        merge = spans
-    else:
-        # block boundaries sit at tiles blk, 2*blk, ...: blocks b-1 and b
-        # merge when the tile-level cut there is not item-closed
-        merge = spans[blk - 1:T - 1:blk]
-    chain = np.concatenate([[0], np.cumsum(~merge)]).astype(np.int64)
+    chain = block_chains(item_id, blk)
     n_chains = int(chain[-1]) + 1
     bcost = tile_cost
     if blk > 1:
@@ -420,9 +436,11 @@ class WorkerShards:
     def worker_cost(self, tile_cost: np.ndarray) -> np.ndarray:
         """Per-worker assigned cost, shape (p,) — the quantity the
         simulator's static-assignment replay must reproduce
-        (`Schedule.replay_sharded`)."""
-        return np.bincount(self.worker,
-                           weights=np.asarray(tile_cost, np.float64),
+        (`Schedule.replay_sharded`). Tiles with worker -1 (present only in
+        partial layouts from `shards_from_block_perm`) carry no cost."""
+        tile_cost = np.asarray(tile_cost, np.float64)
+        live = self.worker >= 0
+        return np.bincount(self.worker[live], weights=tile_cost[live],
                            minlength=self.p)
 
     def shard_item_id(self, schedule: TileSchedule) -> np.ndarray:
@@ -461,6 +479,37 @@ def make_shards(worker: np.ndarray, p: int,
     pos = np.arange(order.size) - np.searchsorted(w_sorted, w_sorted)
     block_perm[w_sorted, pos] = order.astype(np.int32)
     return WorkerShards(worker=worker, block_perm=block_perm, superstep=B)
+
+
+def shards_from_block_perm(block_perm: np.ndarray, n_tiles: int,
+                           superstep: int = SUPERSTEP) -> WorkerShards:
+    """A `WorkerShards` over an EXPLICIT (p, S_B) block layout that may
+    cover only a subset of the blocks — how recovery runs the standard
+    sharded kernels over partial block sets (the completed prefix of an
+    interrupted run, or the survivor re-execution layout). Tiles of
+    unlisted blocks get worker -1 ("not executed in this layout"); padding
+    steps stay -1 as usual. Listed block ids must be in range and
+    pairwise distinct."""
+    bp = np.ascontiguousarray(block_perm, np.int32)
+    if bp.ndim != 2:
+        raise ValueError(f"block_perm must be 2-D (p, S_B), got {bp.shape}")
+    T, B = int(n_tiles), int(superstep)
+    if B < 1:
+        raise ValueError(f"superstep must be positive, got {superstep}")
+    n_blocks = -(-T // B)
+    flat = bp.reshape(-1)
+    sel = flat >= 0
+    ids = flat[sel]
+    if ids.size and (int(ids.max()) >= n_blocks):
+        raise ValueError(f"block id {int(ids.max())} out of range for "
+                         f"{n_blocks} blocks of {B} tiles")
+    if np.unique(ids).size != ids.size:
+        raise ValueError("block_perm lists a block more than once")
+    w_of_block = np.full(n_blocks, -1, np.int32)
+    rows = np.repeat(np.arange(bp.shape[0], dtype=np.int32), bp.shape[1])
+    w_of_block[ids] = rows[sel]
+    worker = np.repeat(w_of_block, B)[:T]
+    return WorkerShards(worker=worker, block_perm=bp, superstep=B)
 
 
 def shard_schedule(schedule: TileSchedule, tile_cost: np.ndarray, p: int,

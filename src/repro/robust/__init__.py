@@ -11,6 +11,13 @@ chaos runs replay bit-identically.
 """
 from .faults import (ChaosBody, Death, FaultClock, FaultError, FaultPlan,
                      FaultReport, InjectedFault, Stall, simulate_faulty)
+# recovery/journal import AFTER faults: both pull in repro.core/serve
+# modules that import repro.robust.faults back (submodule import, safe
+# once .faults is bound above)
+from .recovery import CheckpointLog, RecoveryPlan, plan_recovery
+from .journal import JournalDivergence, ServeJournal, resume_from_journal
 
-__all__ = ["ChaosBody", "Death", "FaultClock", "FaultError", "FaultPlan",
-           "FaultReport", "InjectedFault", "Stall", "simulate_faulty"]
+__all__ = ["ChaosBody", "CheckpointLog", "Death", "FaultClock",
+           "FaultError", "FaultPlan", "FaultReport", "InjectedFault",
+           "JournalDivergence", "RecoveryPlan", "ServeJournal", "Stall",
+           "plan_recovery", "resume_from_journal", "simulate_faulty"]

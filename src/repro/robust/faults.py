@@ -33,8 +33,10 @@ imports the simulator lazily.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import threading
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 
@@ -177,6 +179,47 @@ class FaultPlan:
     @property
     def has_body_faults(self) -> bool:
         return self.flaky_frac > 0.0 or bool(self.poison)
+
+    # ------------------------------------------------------ serialization
+    def to_json(self) -> str:
+        """Canonical JSON for this plan (sorted keys, no whitespace) —
+        the journal/CI artifact form. `from_json(to_json(p)) == p` for
+        every valid plan, and equal plans serialize to equal strings, so
+        `fingerprint()` is a stable identity."""
+        return json.dumps({
+            "seed": int(self.seed),
+            "deaths": [[d.worker, d.after_chunks] for d in self.deaths],
+            "stalls": [[s.worker, s.after_chunks, s.duration]
+                       for s in self.stalls],
+            "flaky_frac": float(self.flaky_frac),
+            "flaky_failures": int(self.flaky_failures),
+            "poison": list(self.poison),
+            "cost_noise": float(self.cost_noise),
+        }, sort_keys=True, separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, blob: Union[str, dict]) -> "FaultPlan":
+        """Inverse of `to_json` (also accepts an already-parsed dict).
+        Round-trips through `__post_init__`, so invalid serialized plans
+        are rejected with the same errors as invalid constructor args."""
+        d = json.loads(blob) if isinstance(blob, str) else dict(blob)
+        return cls(
+            seed=int(d.get("seed", 0)),
+            deaths=tuple(Death(int(w), int(a))
+                         for w, a in d.get("deaths", ())),
+            stalls=tuple(Stall(int(w), int(a), float(dur))
+                         for w, a, dur in d.get("stalls", ())),
+            flaky_frac=float(d.get("flaky_frac", 0.0)),
+            flaky_failures=int(d.get("flaky_failures", 1)),
+            poison=tuple(d.get("poison", ())),
+            cost_noise=float(d.get("cost_noise", 0.0)),
+        )
+
+    def fingerprint(self) -> str:
+        """Short stable content hash of the canonical JSON. A journal
+        stamps this in its header so resume can refuse to continue under
+        a different chaos plan than the one the prefix ran under."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
 
 
 class FaultClock:

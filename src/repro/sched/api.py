@@ -32,6 +32,7 @@ from repro.core import policies as P
 from repro.core import simulator as S
 from repro.core import tiling as T
 from repro.robust import faults as F
+from repro.robust import recovery as R
 
 from .adaptive import CostRefiner
 from .cache import CacheStats, ScheduleCache
@@ -465,6 +466,25 @@ class Schedule:
             record_chunks=record_chunks,
             record_assignment=record_assignment)
 
+    def reshard_survivors(self, *, dead,
+                          checkpoint: Optional[R.CheckpointLog] = None,
+                          p: Optional[int] = None,
+                          superstep: Optional[int] = None) -> R.RecoveryPlan:
+        """Recovery re-lowering for an interrupted sharded run (DESIGN.md
+        §2.11): given the workers lost and a `CheckpointLog` of blocks
+        completed at superstep barriers, re-partition every incomplete
+        item-closed chain onto the p-k survivors with the same
+        `partition_tiles` LPT the original lowering used. The returned
+        `RecoveryPlan` carries the survivor layout (`.shards`), the
+        completed-prefix layout (`.done_shards`), and `.combine()` — both
+        layouts drive the standard sharded kernels over the original flat
+        payload, and the combined output is bit-identical to the
+        fault-free run. Without a checkpoint the plan is a worst-case
+        full re-execution on the survivors."""
+        shards = self.shard(p=p, superstep=superstep)
+        return R.plan_recovery(self.tiles, self.tile_cost(), shards,
+                               dead=dead, checkpoint=checkpoint)
+
     # -------------------------------------------------------- (b) executor
     def parallel_for(self, body: Callable[[int], None], *,
                      p: Optional[int] = None,
@@ -473,27 +493,32 @@ class Schedule:
                      deterministic: bool = False,
                      faults: Optional[F.FaultPlan] = None,
                      retries: int = 0, retry_backoff_s: float = 0.0,
-                     watchdog_s: Optional[float] = None) -> E.ExecStats:
+                     watchdog_s: Optional[float] = None,
+                     sleep_fn: Optional[Callable[[float], None]] = None
+                     ) -> E.ExecStats:
         """Run `body(i)` for every item on real threads under `policy`
         (default: the schedule's). `record_chunks=True` fills the per-chunk
         wall-time log `observe()` consumes (DESIGN.md §2.7). `faults`,
-        `retries`/`retry_backoff_s`, and `watchdog_s` pass through to the
-        supervised executor (DESIGN.md §2.9): injected chaos, per-item
-        retry budget, and heartbeat-based dead-worker detection."""
+        `retries`/`retry_backoff_s`, `watchdog_s`, and `sleep_fn` pass
+        through to the supervised executor (DESIGN.md §2.9): injected
+        chaos, per-item retry budget, heartbeat-based dead-worker
+        detection, and the virtual-sleep hook for zero-wall-clock
+        retry/stall suites."""
         return E.parallel_for(self.n_items, body, p or self.p,
                               policy or self.policy, seed=seed,
                               record_chunks=record_chunks,
                               deterministic=deterministic, faults=faults,
                               retries=retries,
                               retry_backoff_s=retry_backoff_s,
-                              watchdog_s=watchdog_s)
+                              watchdog_s=watchdog_s, sleep_fn=sleep_fn)
 
     def parallel_for_units(self, body: Callable[[int], None], *,
                            p: Optional[int] = None,
                            seed: int = 0, record_chunks: bool = False,
                            deterministic: bool = False,
                            faults: Optional[F.FaultPlan] = None,
-                           retries: int = 0, retry_backoff_s: float = 0.0
+                           retries: int = 0, retry_backoff_s: float = 0.0,
+                           sleep_fn: Optional[Callable[[float], None]] = None
                            ) -> E.ExecStats:
         """Run `body(u)` for every flattened work unit on real threads,
         dispatched in exactly the constructed tile chunks (one central-queue
@@ -508,7 +533,8 @@ class Schedule:
                               record_chunks=record_chunks,
                               deterministic=deterministic, faults=faults,
                               retries=retries,
-                              retry_backoff_s=retry_backoff_s)
+                              retry_backoff_s=retry_backoff_s,
+                              sleep_fn=sleep_fn)
 
 
 class LoopScheduler:

@@ -34,7 +34,8 @@ _LAZY = {
     "RoundRobin": "policies",
     "StepPlan": "policies",
     "default_policies": "policies",
-    # the batcher + its backends/clocks
+    # the batcher + its backends/clocks + the hardened boundary
+    "CircuitBreaker": "batcher",
     "ContinuousBatcher": "batcher",
     "EngineBackend": "batcher",
     "SimBackend": "batcher",

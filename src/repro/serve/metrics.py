@@ -136,6 +136,30 @@ class LatencyHistogram:
         s.update(self.percentiles((50, 90, 99, 99.9)))
         return s
 
+    # ------------------------------------------------- snapshot (DESIGN §2.11)
+    def state_dict(self) -> dict:
+        """JSON-serializable full state; `from_state` restores a histogram
+        that answers every query identically (crash-resume snapshots)."""
+        return {"min_value": self.min_value, "max_value": self.max_value,
+                "resolution": self.resolution, "counts": list(self._counts),
+                "count": self.count, "total": self.total,
+                "min_seen": self._min_seen, "max_seen": self._max_seen}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "LatencyHistogram":
+        h = cls(min_value=d["min_value"], max_value=d["max_value"],
+                resolution=d["resolution"])
+        counts = list(d["counts"])
+        if len(counts) != h._n_buckets:
+            raise ValueError(f"state has {len(counts)} buckets, layout "
+                             f"needs {h._n_buckets}")
+        h._counts = counts
+        h.count = int(d["count"])
+        h.total = float(d["total"])
+        h._min_seen = d["min_seen"]
+        h._max_seen = d["max_seen"]
+        return h
+
     def __repr__(self):
         if self.count == 0:
             return "LatencyHistogram(empty)"
@@ -171,6 +195,10 @@ class ServeMetrics:
         self.n_tokens_out = 0         # goodput numerator
         self.n_tokens_shed = 0        # decode steps shed by degradation
         self.t_elapsed = 0.0          # serving-clock seconds (set by run())
+        # ---- hardened backend boundary (DESIGN.md §2.11) ----
+        self.n_backend_faults = 0     # terminal per-op FaultErrors absorbed
+        self.n_backend_retries = 0    # per-op retry attempts spent
+        self.n_breaker_trips = 0      # circuit breaker closed->open events
 
     def goodput(self, elapsed_s: Optional[float] = None) -> float:
         """Delivered tokens per second of serving-clock time."""
@@ -192,6 +220,33 @@ class ServeMetrics:
             "n_degraded": self.n_degraded,
             "n_tokens_out": self.n_tokens_out,
             "n_tokens_shed": self.n_tokens_shed,
+            "n_backend_faults": self.n_backend_faults,
+            "n_backend_retries": self.n_backend_retries,
+            "n_breaker_trips": self.n_breaker_trips,
             "elapsed_s": elapsed_s,
             "goodput_tok_s": self.goodput(elapsed_s),
         }
+
+    # ------------------------------------------------- snapshot (DESIGN §2.11)
+    _COUNTERS = ("n_arrived", "n_admitted", "n_shed_admission",
+                 "n_completed", "n_degraded", "n_tokens_out",
+                 "n_tokens_shed", "t_elapsed", "n_backend_faults",
+                 "n_backend_retries", "n_breaker_trips")
+
+    def state_dict(self) -> dict:
+        d = {"ttft": self.ttft.state_dict(),
+             "per_token": self.per_token.state_dict(),
+             "e2e": self.e2e.state_dict()}
+        for k in self._COUNTERS:
+            d[k] = getattr(self, k)
+        return d
+
+    @classmethod
+    def from_state(cls, d: dict) -> "ServeMetrics":
+        m = cls()
+        m.ttft = LatencyHistogram.from_state(d["ttft"])
+        m.per_token = LatencyHistogram.from_state(d["per_token"])
+        m.e2e = LatencyHistogram.from_state(d["e2e"])
+        for k in cls._COUNTERS:
+            setattr(m, k, d[k])
+        return m

@@ -54,6 +54,20 @@ class Request:
     def prompt_len(self) -> int:
         return int(self.tokens.shape[1])
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (journal admission events, snapshots)."""
+        return {"req_id": int(self.req_id),
+                "tokens": [int(t) for t in self.tokens[0]],
+                "n_new": int(self.n_new), "deadline_s": self.deadline_s,
+                "t_arrival": float(self.t_arrival)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Request":
+        return cls(req_id=int(d["req_id"]),
+                   tokens=np.asarray(d["tokens"], np.int32),
+                   n_new=int(d["n_new"]), deadline_s=d.get("deadline_s"),
+                   t_arrival=float(d.get("t_arrival", 0.0)))
+
 
 @dataclasses.dataclass
 class RequestState:
@@ -134,6 +148,36 @@ class RequestState:
                 "e2e": (None if self.t_done is None
                         else self.t_done - self.request.t_arrival)}
 
+    # ------------------------------------------- snapshot (DESIGN.md §2.11)
+    def state_dict(self) -> dict:
+        """Everything durable about the request: cursors, iCh band, output,
+        timestamps. `cache`/`last_logits` are deliberately absent — under
+        the real engine they are re-derived bit-identically by replaying
+        the journaled prefill chunks through `prefill_extend`
+        (`EngineBackend.rebuild_state`)."""
+        return {"request": self.request.to_dict(), "status": self.status,
+                "d": self.d, "ks": list(self.ks),
+                "chunk_log": [dict(c) for c in self.chunk_log],
+                "prefill_done": int(self.prefill_done),
+                "out_tokens": [int(t) for t in self.out_tokens],
+                "degraded": self.degraded, "n_shed": int(self.n_shed),
+                "t_admit": self.t_admit,
+                "t_first_token": self.t_first_token,
+                "t_last_token": self.t_last_token, "t_done": self.t_done}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "RequestState":
+        return cls(request=Request.from_dict(d["request"]),
+                   status=d["status"], d=float(d["d"]),
+                   ks=list(d["ks"]),
+                   chunk_log=[dict(c) for c in d["chunk_log"]],
+                   prefill_done=int(d["prefill_done"]),
+                   out_tokens=[int(t) for t in d["out_tokens"]],
+                   degraded=bool(d["degraded"]), n_shed=int(d["n_shed"]),
+                   t_admit=d["t_admit"],
+                   t_first_token=d["t_first_token"],
+                   t_last_token=d["t_last_token"], t_done=d["t_done"])
+
 
 class AdmissionQueue:
     """Bounded pending queue + running set with deterministic shed.
@@ -200,3 +244,23 @@ class AdmissionQueue:
 
     def decoding(self) -> list[RequestState]:
         return [st for st in self.running if st.decoding]
+
+    # ------------------------------------------- snapshot (DESIGN.md §2.11)
+    def state_dict(self) -> dict:
+        return {"max_pending": self.max_pending,
+                "max_running": self.max_running,
+                "init_divisor": self.init_divisor,
+                "pending": [st.state_dict() for st in self.pending],
+                "running": [st.state_dict() for st in self.running],
+                "done": [st.state_dict() for st in self.done],
+                "shed": [r.to_dict() for r in self.shed]}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "AdmissionQueue":
+        q = cls(max_pending=d["max_pending"], max_running=d["max_running"],
+                init_divisor=d["init_divisor"])
+        q.pending = deque(RequestState.from_state(s) for s in d["pending"])
+        q.running = [RequestState.from_state(s) for s in d["running"]]
+        q.done = [RequestState.from_state(s) for s in d["done"]]
+        q.shed = [Request.from_dict(r) for r in d["shed"]]
+        return q

@@ -7,8 +7,11 @@ output bit-identical to the sequential reference, every iteration executed
 exactly once, and the same plan replayed twice yields identical
 chunk/steal/fault traces.
 """
+import dataclasses
+import json
 import os
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -455,3 +458,113 @@ class TestRecoveryProperties:
         assert a.fault_log == b.fault_log
         np.testing.assert_array_equal(a.assignment, b.assignment)
         assert (a.assignment >= 0).all()
+
+
+# ------------------------------------- fault-plan serialization (PR 9)
+
+class TestFaultPlanSerialization:
+    def test_roundtrip_and_fingerprint(self):
+        plan = FaultPlan(seed=3, deaths=((1, 2),), stalls=((0, 4, 0.5),),
+                         flaky_frac=0.1, flaky_failures=2, poison=(7,),
+                         cost_noise=0.2)
+        assert FaultPlan.from_json(plan.to_json()) == plan
+        assert FaultPlan.from_json(json.loads(plan.to_json())) == plan
+        assert plan.fingerprint() == FaultPlan.from_json(
+            plan.to_json()).fingerprint()
+
+    def test_fingerprint_sensitive_to_every_field(self):
+        base = FaultPlan(seed=3, deaths=((1, 2),), stalls=((0, 4, 0.5),),
+                         flaky_frac=0.1, flaky_failures=2, poison=(7,),
+                         cost_noise=0.2)
+        variants = [
+            dataclasses.replace(base, seed=4),
+            dataclasses.replace(base, deaths=((1, 3),)),
+            dataclasses.replace(base, stalls=((0, 4, 0.6),)),
+            dataclasses.replace(base, flaky_frac=0.2),
+            dataclasses.replace(base, flaky_failures=3),
+            dataclasses.replace(base, poison=(8,)),
+            dataclasses.replace(base, cost_noise=0.3),
+        ]
+        fps = {v.fingerprint() for v in variants}
+        assert len(fps) == len(variants)
+        assert base.fingerprint() not in fps
+
+    def test_invalid_serialized_plan_rejected(self):
+        blob = FaultPlan(flaky_frac=0.1).to_json()
+        bad = json.loads(blob)
+        bad["flaky_frac"] = 1.5
+        with pytest.raises(ValueError):
+            FaultPlan.from_json(bad)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestFaultPlanJsonProperties:
+    """Satellite (PR 9): to_json/from_json is the identity over the full
+    plan space, and the fingerprint is a function of plan VALUE only."""
+
+    plans = st.builds(
+        FaultPlan,
+        seed=st.integers(0, 2**31 - 1),
+        deaths=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 50)),
+                        max_size=4).map(tuple),
+        stalls=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 50),
+                                  st.floats(0.0, 10.0)),
+                        max_size=4).map(tuple),
+        flaky_frac=st.floats(0.0, 1.0),
+        flaky_failures=st.integers(1, 5),
+        poison=st.lists(st.integers(0, 1000), max_size=4).map(tuple),
+        cost_noise=st.floats(0.0, 3.0),
+    ) if HAVE_HYPOTHESIS else None
+
+    @settings(max_examples=60, deadline=None)
+    @given(plan=plans)
+    def test_json_roundtrip_identity(self, plan):
+        back = FaultPlan.from_json(plan.to_json())
+        assert back == plan
+        assert back.to_json() == plan.to_json()
+        assert back.fingerprint() == plan.fingerprint()
+
+    @settings(max_examples=30, deadline=None)
+    @given(plan=plans, seed2=st.integers(0, 2**31 - 1))
+    def test_fingerprint_is_value_identity(self, plan, seed2):
+        same = FaultPlan.from_json(json.loads(plan.to_json()))
+        assert same.fingerprint() == plan.fingerprint()
+        other = dataclasses.replace(plan, seed=seed2)
+        assert (other.fingerprint() == plan.fingerprint()) == \
+            (other == plan)
+
+
+# --------------------------------------- injectable backoff sleep (PR 9)
+
+class TestSleepFnHook:
+    def test_retry_backoff_routed_through_sleep_fn(self):
+        """A flaky run with a real backoff costs zero wall-clock when
+        `sleep_fn` is injected, and the recorded delays follow the
+        bounded-exponential contract."""
+        n = 300
+        hits = np.zeros(n, np.int64)
+        lock = threading.Lock()
+
+        def body(i):
+            with lock:
+                hits[i] += 1
+        sleeps = []
+        plan = FaultPlan(seed=11, flaky_frac=0.1, flaky_failures=2)
+        t0 = time.monotonic()
+        stats = E.parallel_for(n, body, 4, P.ich(), seed=3, faults=plan,
+                               retries=2, retry_backoff_s=0.5,
+                               sleep_fn=sleeps.append)
+        assert time.monotonic() - t0 < 2.0   # nobody actually slept
+        assert (hits == 1).all()
+        assert stats.retries > 0
+        assert len(sleeps) == stats.retries
+        assert all(0.0 < s <= E.RETRY_BACKOFF_CAP_S for s in sleeps)
+
+    def test_injected_stalls_routed_through_sleep_fn(self):
+        sleeps = []
+        plan = FaultPlan(stalls=((0, 2, 5.0),))
+        t0 = time.monotonic()
+        E.parallel_for(200, lambda i: None, 2, P.ich(), seed=0,
+                       faults=plan, sleep_fn=sleeps.append)
+        assert time.monotonic() - t0 < 2.0
+        assert 5.0 in sleeps

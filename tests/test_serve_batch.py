@@ -300,3 +300,101 @@ class TestPolicies:
         q.admit(0.0)
         plan = IChAdaptive().choose(q, now=0.0)
         assert plan.prefill.request.req_id == 1  # drain the near-done one
+
+
+# ----------------------------------- histogram merge ranges + state (PR 9)
+
+class TestHistogramMergeRanges:
+    """Satellite (PR 9): `merge` against the combined-stream oracle when
+    the two inputs occupy DISJOINT bucket ranges (percentile mass jumps
+    the gap) and heavily OVERLAPPING ones, plus merge of serialized
+    state."""
+
+    def _oracle_equal(self, a, b):
+        ha, hb, hc = (LatencyHistogram() for _ in range(3))
+        ha.record_many(a)
+        hb.record_many(b)
+        hc.record_many(np.concatenate([a, b]))
+        ha.merge(hb)
+        assert ha.count == hc.count
+        assert ha.total == pytest.approx(hc.total)
+        assert ha.percentile(0) == hc.percentile(0)
+        assert ha.percentile(100) == hc.percentile(100)
+        for q in (10, 50, 90, 99, 99.9):
+            assert ha.percentile(q) == hc.percentile(q), q
+
+    def test_disjoint_ranges(self):
+        rng = np.random.default_rng(21)
+        fast = rng.uniform(1e-4, 5e-4, 700)     # sub-millisecond band
+        slow = rng.uniform(2.0, 30.0, 300)      # seconds band, no overlap
+        self._oracle_equal(fast, slow)
+        self._oracle_equal(slow, fast)          # merge is symmetric here
+
+    def test_overlapping_ranges(self):
+        rng = np.random.default_rng(22)
+        self._oracle_equal(rng.lognormal(-2.5, 0.8, 900),
+                           rng.lognormal(-2.0, 0.8, 1100))
+
+    def test_merge_into_empty_and_of_empty(self):
+        rng = np.random.default_rng(23)
+        xs = rng.uniform(0.01, 1.0, 200)
+        h = LatencyHistogram()
+        full = LatencyHistogram()
+        full.record_many(xs)
+        h.merge(full)                            # empty <- full
+        full.merge(LatencyHistogram())           # full <- empty
+        for q in (0, 50, 99, 100):
+            assert h.percentile(q) == full.percentile(q)
+        assert h.count == full.count == 200
+
+    def test_merge_after_state_roundtrip(self):
+        rng = np.random.default_rng(24)
+        a, b = rng.uniform(1e-3, 0.1, 300), rng.uniform(5.0, 50.0, 300)
+        ha, hb = LatencyHistogram(), LatencyHistogram()
+        ha.record_many(a)
+        hb.record_many(b)
+        direct = LatencyHistogram()
+        direct.record_many(np.concatenate([a, b]))
+        back = LatencyHistogram.from_state(ha.state_dict())
+        back.merge(LatencyHistogram.from_state(hb.state_dict()))
+        for q in (0, 50, 90, 99, 100):
+            assert back.percentile(q) == direct.percentile(q)
+
+
+# ------------------------------------- deadline carry-through (PR 9)
+
+class TestDeadlineCarryThrough:
+    """Satellite (PR 9): the loadgen's `deadline_s` reaches every
+    `Arrival`, survives `make_request_factory`, and lands on each
+    `Request` the batcher enforces; absent a deadline, nothing is
+    stamped."""
+
+    def test_deadline_stamped_on_all_arrivals_and_requests(self):
+        gen = OpenPoissonLoadGen(rate=30.0, deadline_s=0.75, seed=5)
+        arrivals = gen.arrivals(20)
+        assert len(arrivals) == 20
+        assert all(a.deadline_s == 0.75 for a in arrivals)
+        mk = make_request_factory(gen, vocab_size=128)
+        reqs = [mk(a) for a in arrivals]
+        assert all(r.deadline_s == 0.75 for r in reqs)
+        assert [r.t_arrival for r in reqs] == [a.t for a in arrivals]
+
+    def test_no_deadline_means_none_everywhere(self):
+        gen = OpenPoissonLoadGen(rate=30.0, seed=5)
+        arrivals = gen.arrivals(10)
+        mk = make_request_factory(gen, vocab_size=128)
+        assert all(a.deadline_s is None for a in arrivals)
+        assert all(mk(a).deadline_s is None for a in arrivals)
+
+    def test_deadline_enforced_end_to_end(self):
+        """The stamped deadline is the one the batcher degrades on: same
+        trace, tight vs generous deadline, only the tight one sheds."""
+        def run(deadline_s):
+            gen = OpenPoissonLoadGen(
+                rate=200.0, deadline_s=deadline_s,
+                output_lens=LengthDist("fixed", 16, 16), seed=11)
+            _, m = run_sim(FCFSStatic(), gen.arrivals(12), gen,
+                           max_running=2)
+            return m
+        assert run(0.05).n_degraded > 0
+        assert run(1e6).n_degraded == 0

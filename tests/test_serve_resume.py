@@ -1,0 +1,524 @@
+"""Serving crash resume + the hardened backend boundary (DESIGN.md §2.11):
+the append-only deterministic journal, kill-and-resume bit-identity across
+seeded kill points (the CI recovery matrix), `snapshot()/restore()`, the
+`EngineBackend` retry budget / circuit breaker, and KV rebuild on the real
+engine.
+
+Journals from the matrix cases are written to results/recovery/ so a CI
+failure uploads the exact interrupted-run state that broke.
+"""
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.robust import (FaultPlan, InjectedFault, JournalDivergence,
+                          ServeJournal, resume_from_journal)
+from repro.serve.batcher import (CircuitBreaker, ContinuousBatcher,
+                                 EngineBackend, SimBackend, SimClock,
+                                 StepCostModel, make_request_factory)
+from repro.serve.loadgen import OpenPoissonLoadGen
+from repro.serve.policies import FCFSStatic, IChAdaptive, RoundRobin
+from repro.serve.queue import AdmissionQueue, Request
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "recovery"
+
+# seeded kill points for the CI recovery matrix (>= 12 by default);
+# override RECOVERY_SEEDS=0,1,... to widen or pin the sweep
+RECOVERY_SEEDS = [int(s) for s in os.environ.get(
+    "RECOVERY_SEEDS", ",".join(map(str, range(12)))).split(",") if s != ""]
+
+
+def _workload(seed, n=14):
+    gen = OpenPoissonLoadGen(rate=40.0, deadline_s=2.0, seed=seed)
+    return gen.arrivals(n), make_request_factory(gen, vocab_size=256)
+
+
+def _batcher(seed, *, policy=None, journal=None, faults=None):
+    return ContinuousBatcher(
+        policy if policy is not None else IChAdaptive(),
+        queue=AdmissionQueue(max_pending=8, max_running=4),
+        backend=SimBackend(StepCostModel(seed=seed)),
+        clock=SimClock(), faults=faults, journal=journal)
+
+
+def _run_killed(seed, kill_events, *, policy=None, faults=None):
+    """Drive a journaled run and abandon it once the journal holds
+    `kill_events` events — the crash, mid-run, at a step boundary."""
+    arrivals, mk = _workload(seed)
+    j = ServeJournal()
+    b = _batcher(seed, policy=policy, journal=j, faults=faults)
+    pending = sorted(arrivals, key=lambda a: (a.t, a.req_id))
+    i = 0
+    b._t_start = b.clock.now()
+    b._j({"ev": "run", "t_start": b._t_start})
+    while len(j.events) < kill_events:
+        now = b.clock.now()
+        while i < len(pending) and pending[i].t + b._t_start <= now:
+            a = dataclasses.replace(pending[i], t=pending[i].t + b._t_start)
+            b.submit(mk(a))
+            i += 1
+        if not b.step():
+            if i >= len(pending):
+                break
+            gap = pending[i].t + b._t_start - now
+            b._j({"ev": "gap", "dt": gap})
+            b.clock.advance(gap)
+    return j
+
+
+# ----------------------------------------------------- journal mechanics
+
+class TestServeJournal:
+    def test_jsonl_roundtrip_is_exact(self):
+        arrivals, mk = _workload(0)
+        j = ServeJournal()
+        _batcher(0, journal=j).run(arrivals, make_request=mk)
+        assert len(j.events) > 20
+        back = ServeJournal.from_jsonl(j.to_jsonl())
+        assert back.events == j.events
+        assert back.header == j.header
+
+    def test_torn_final_line_dropped(self):
+        text = ('{"ev":"header","version":1}\n'
+                '{"ev":"run","t_start":0.0}\n'
+                '{"ev":"step","i":0,"dt":0.0')       # crash mid-write
+        j = ServeJournal.from_jsonl(text)
+        assert [e["ev"] for e in j.events] == ["header", "run"]
+
+    def test_malformed_interior_line_raises(self):
+        text = '{"ev":"header"}\nnot json\n{"ev":"run","t_start":0.0}\n'
+        with pytest.raises(json.JSONDecodeError):
+            ServeJournal.from_jsonl(text)
+
+    def test_file_mirror_flushes_every_event(self, tmp_path):
+        path = tmp_path / "serve.jsonl"
+        j = ServeJournal(path=str(path))
+        arrivals, mk = _workload(1)
+        _batcher(1, journal=j).run(arrivals, make_request=mk)
+        loaded = ServeJournal.load(path)
+        assert loaded.events == j.events
+
+    def test_numpy_scalars_canonicalized(self):
+        j = ServeJournal()
+        j.append({"ev": "x", "v": np.int64(3), "f": np.float64(0.5)})
+        assert j.events[0] == {"ev": "x", "v": 3, "f": 0.5}
+        assert json.loads(j.to_jsonl()) == j.events[0]
+
+
+# ------------------------------------------------ kill-and-resume matrix
+
+@pytest.mark.parametrize("seed", RECOVERY_SEEDS)
+def test_kill_and_resume_bit_identical(seed):
+    """The acceptance criterion: kill the batcher at a seed-derived event
+    count, resume from the journal, finish the trace — final journal,
+    queue state, and metrics summary are bit-identical to the
+    uninterrupted run. The interrupted journal is written to
+    results/recovery/ for the CI failure artifact."""
+    arrivals, mk = _workload(seed)
+    j_full = ServeJournal()
+    b_full = _batcher(seed, journal=j_full)
+    m_full = b_full.run(arrivals, make_request=mk)
+    n_ev = len(j_full.events)
+    assert n_ev > 10
+    kill = 2 + (seed * 37) % (n_ev - 4)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    j_kill = _run_killed(seed, kill)
+    (RESULTS / f"serve_seed{seed}.jsonl").write_text(j_kill.to_jsonl())
+
+    # resume from the persisted form (what a real crash leaves behind)
+    j_loaded = ServeJournal.from_jsonl(j_kill.to_jsonl())
+    rb = resume_from_journal(
+        j_loaded, policy=IChAdaptive(),
+        queue=AdmissionQueue(max_pending=8, max_running=4),
+        backend=SimBackend(StepCostModel(seed=seed)))
+    m_res = rb.run(arrivals, make_request=mk)
+    assert rb.journal.events == j_full.events
+    assert rb.queue.state_dict() == b_full.queue.state_dict()
+    assert m_res.summary() == m_full.summary()
+    # per-request outputs and stats survive the crash exactly
+    for a, c in zip(b_full.queue.done, rb.queue.done):
+        assert a.out_tokens == c.out_tokens
+        assert a.stats() == c.stats()
+
+
+def test_resume_with_fault_plan_stalls(seed=5):
+    """Journaled stall events replay: a FaultPlan's batcher-loop stalls
+    (worker 0) are consumed at the same steps on resume, and the resumed
+    run still matches the uninterrupted faulty run."""
+    plan = FaultPlan(seed=seed, stalls=((0, 3, 1.5), (0, 9, 0.7)))
+    arrivals, mk = _workload(seed)
+    j_full = ServeJournal()
+    b_full = _batcher(seed, journal=j_full, faults=plan)
+    m_full = b_full.run(arrivals, make_request=mk)
+    assert any(e["ev"] == "stall" for e in j_full.events)
+
+    j_kill = _run_killed(seed, len(j_full.events) // 2, faults=plan)
+    rb = resume_from_journal(
+        j_kill, policy=IChAdaptive(),
+        queue=AdmissionQueue(max_pending=8, max_running=4),
+        backend=SimBackend(StepCostModel(seed=seed)), faults=plan)
+    m_res = rb.run(arrivals, make_request=mk)
+    assert rb.journal.events == j_full.events
+    assert m_res.summary() == m_full.summary()
+
+
+class TestResumeRefusals:
+    def _journal(self, seed=3):
+        arrivals, mk = _workload(seed)
+        j = ServeJournal()
+        _batcher(seed, journal=j).run(arrivals, make_request=mk)
+        return j
+
+    def test_wrong_policy_refused(self):
+        j = self._journal()
+        with pytest.raises(JournalDivergence, match="policy"):
+            resume_from_journal(
+                j, policy=FCFSStatic(),
+                queue=AdmissionQueue(max_pending=8, max_running=4),
+                backend=SimBackend(StepCostModel(seed=3)))
+
+    def test_wrong_cost_model_refused(self):
+        j = self._journal()
+        with pytest.raises(JournalDivergence, match="cost_model"):
+            resume_from_journal(
+                j, policy=IChAdaptive(),
+                queue=AdmissionQueue(max_pending=8, max_running=4),
+                backend=SimBackend(StepCostModel(seed=99)))
+
+    def test_wrong_fault_plan_fingerprint_refused(self):
+        plan = FaultPlan(seed=2, stalls=((0, 4, 1.0),))
+        arrivals, mk = _workload(2)
+        j = ServeJournal()
+        _batcher(2, journal=j, faults=plan).run(arrivals, make_request=mk)
+        other = FaultPlan(seed=2, stalls=((0, 4, 2.0),))
+        assert other.fingerprint() != plan.fingerprint()
+        with pytest.raises(JournalDivergence, match="faults"):
+            resume_from_journal(
+                j, policy=IChAdaptive(),
+                queue=AdmissionQueue(max_pending=8, max_running=4),
+                backend=SimBackend(StepCostModel(seed=2)), faults=other)
+
+    def test_strict_false_overrides_header_check(self):
+        j = self._journal()
+        rb = resume_from_journal(
+            j, policy=IChAdaptive(),
+            queue=AdmissionQueue(max_pending=8, max_running=4),
+            backend=SimBackend(StepCostModel(seed=3)), strict=False)
+        assert rb.step_idx > 0
+
+    def test_headerless_journal_refused(self):
+        with pytest.raises(JournalDivergence, match="no header"):
+            resume_from_journal(ServeJournal(), policy=IChAdaptive())
+
+
+# --------------------------------------------------- snapshot / restore
+
+def test_snapshot_restore_resumes_identically():
+    """Direct state restore (no replay) with a stateless policy: the
+    restored batcher finishes the trace to the same queue state and
+    metrics as the uninterrupted run."""
+    seed = 4
+    arrivals, mk = _workload(seed)
+    b_full = _batcher(seed, policy=FCFSStatic())
+    m_full = b_full.run(arrivals, make_request=mk)
+
+    b = _batcher(seed, policy=FCFSStatic())
+    pending = sorted(arrivals, key=lambda a: (a.t, a.req_id))
+    i = 0
+    b._t_start = b.clock.now()
+    for _ in range(23):
+        now = b.clock.now()
+        while i < len(pending) and pending[i].t + b._t_start <= now:
+            a = dataclasses.replace(pending[i], t=pending[i].t + b._t_start)
+            b.submit(mk(a))
+            i += 1
+        if not b.step():
+            if i >= len(pending):
+                break
+            b.clock.advance(pending[i].t + b._t_start - now)
+    snap = json.loads(json.dumps(b.snapshot()))   # through serialization
+    rb = ContinuousBatcher.restore(
+        snap, policy=FCFSStatic(),
+        backend=SimBackend(StepCostModel(seed=seed)))
+    m_res = rb.run(arrivals, make_request=mk)
+    assert rb.queue.state_dict() == b_full.queue.state_dict()
+    assert m_res.summary() == m_full.summary()
+
+
+def test_snapshot_restore_version_check():
+    b = _batcher(0, policy=FCFSStatic())
+    snap = b.snapshot()
+    snap["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        ContinuousBatcher.restore(snap, policy=FCFSStatic())
+
+
+# --------------------------------------------- hardened backend boundary
+
+class FakeEngine:
+    """Pure-Python engine twin: tokens are the SimBackend's deterministic
+    function of (req_id, position), faults are injected by a predicate on
+    (op, call index) so flaky scenarios replay exactly."""
+
+    def __init__(self, fail=None):
+        self.calls = 0
+        self.fail = fail if fail is not None else (lambda op, call: False)
+
+    def _op(self, op):
+        self.calls += 1
+        if self.fail(op, self.calls):
+            raise InjectedFault(f"injected {op} fault at call {self.calls}")
+
+    def prefill_chunk_step(self, st, chunk):
+        self._op("prefill")
+        c = min(int(chunk), st.remaining_prefill)
+        st.prefill_done += c
+        if st.remaining_prefill == 0:
+            st.out_tokens.append((st.request.req_id * 7919) % 251)
+
+    def decode_one(self, st):
+        self._op("decode")
+        st.out_tokens.append(
+            (st.request.req_id * 7919 + len(st.out_tokens)) % 251)
+
+
+def _requests(n=3, n_new=5, deadline_s=None):
+    return [Request(req_id=i, tokens=np.arange(1, 7, dtype=np.int32),
+                    n_new=n_new, deadline_s=deadline_s, t_arrival=0.0)
+            for i in range(n)]
+
+
+class TestCircuitBreaker:
+    def test_state_machine(self):
+        br = CircuitBreaker(threshold=2, cooldown_steps=3)
+        assert br.allow(0) and br.state == br.CLOSED
+        br.record_failure(0)
+        assert br.state == br.CLOSED
+        br.record_failure(1)
+        assert br.state == br.OPEN and br.n_trips == 1
+        assert not br.allow(2) and not br.allow(3)
+        assert br.allow(4) and br.state == br.HALF_OPEN   # cooldown done
+        br.record_failure(4)                              # probe failed
+        assert br.state == br.OPEN and br.n_trips == 2
+        assert br.allow(8) and br.state == br.HALF_OPEN
+        br.record_success()                               # probe succeeded
+        assert br.state == br.CLOSED and br.failures == 0
+
+    def test_success_resets_consecutive_count(self):
+        br = CircuitBreaker(threshold=3, cooldown_steps=2)
+        br.record_failure(0)
+        br.record_failure(1)
+        br.record_success()
+        br.record_failure(2)
+        br.record_failure(3)
+        assert br.state == br.CLOSED   # never 3 consecutive
+
+    def test_state_dict_roundtrip(self):
+        br = CircuitBreaker(threshold=2, cooldown_steps=5)
+        br.record_failure(0)
+        br.record_failure(1)
+        back = CircuitBreaker.from_state(br.state_dict())
+        assert back.state_dict() == br.state_dict()
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            CircuitBreaker(threshold=0)
+        with pytest.raises(ValueError):
+            CircuitBreaker(cooldown_steps=0)
+
+
+class TestEngineBackendHardening:
+    def test_transient_faults_absorbed_by_retry_budget(self):
+        """Every 5th engine call fails once; with a retry budget the run
+        completes with full outputs, zero absorbed faults, and the retry
+        backoff goes through the injected sleep_fn (zero wall-clock)."""
+        sleeps = []
+        eng = FakeEngine(fail=lambda op, call: call % 5 == 0)
+        be = EngineBackend(eng, retries=2, retry_backoff_s=0.05,
+                           sleep_fn=sleeps.append)
+        b = ContinuousBatcher(RoundRobin(chunk=4, min_chunk=2),
+                              queue=AdmissionQueue(max_running=4),
+                              backend=be, clock=SimClock())
+        sts = [b.submit(r) for r in _requests()]
+        t0 = time.monotonic()
+        while b.step():
+            pass
+        assert time.monotonic() - t0 < 1.0      # no real backoff sleeps
+        assert sleeps and all(s > 0 for s in sleeps)
+        assert be.n_retries == len(sleeps)
+        assert be.n_faults == 0
+        for st in sts:
+            assert st.out_tokens == [(st.request.req_id * 7919 + j) % 251
+                                     for j in range(5)]
+        assert b.metrics.n_backend_retries == be.n_retries
+
+    def test_dead_engine_degrades_instead_of_crashing(self):
+        """An engine that dies permanently mid-run: the retry budget is
+        exhausted, faults are absorbed, the breaker opens and charges
+        `open_step_s` to the simulated clock, and every stuck request
+        exits through the deadline path DEGRADED — the batcher loop never
+        sees an exception."""
+        eng = FakeEngine(fail=lambda op, call: call > 10)
+        be = EngineBackend(
+            eng, retries=1,
+            breaker=CircuitBreaker(threshold=2, cooldown_steps=4),
+            open_step_s=0.05)
+        b = ContinuousBatcher(RoundRobin(chunk=4, min_chunk=2),
+                              queue=AdmissionQueue(max_running=4),
+                              backend=be, clock=SimClock())
+        sts = [b.submit(r) for r in _requests(n=3, n_new=8,
+                                              deadline_s=1.0)]
+        steps = 0
+        while b.step():
+            steps += 1
+            assert steps < 500, "batcher failed to drain via deadlines"
+        assert be.n_faults > 0
+        assert be.breaker.state == be.breaker.OPEN
+        assert b.metrics.n_breaker_trips >= 1
+        assert b.metrics.n_backend_faults == be.n_faults
+        degraded = [st for st in sts if st.degraded]
+        assert degraded and all(st.n_shed > 0 for st in degraded)
+        assert b.queue.running == []             # everyone finalized
+
+    def test_breaker_half_open_probe_recovers(self):
+        """The engine fails for a window then recovers: the breaker trips,
+        the half-open probe succeeds once the window passes, and every
+        request still completes its FULL output (nothing degraded —
+        failed ops made no progress, so no tokens were lost)."""
+        eng = FakeEngine(fail=lambda op, call: 4 <= call <= 9)
+        be = EngineBackend(
+            eng, breaker=CircuitBreaker(threshold=2, cooldown_steps=3),
+            open_step_s=0.01)
+        b = ContinuousBatcher(RoundRobin(chunk=4, min_chunk=2),
+                              queue=AdmissionQueue(max_running=4),
+                              backend=be, clock=SimClock())
+        sts = [b.submit(r) for r in _requests(n=2, n_new=4)]
+        while b.step():
+            pass
+        assert be.breaker.n_trips >= 1
+        assert be.breaker.state == be.breaker.CLOSED
+        for st in sts:
+            assert not st.degraded
+            assert st.out_tokens == [(st.request.req_id * 7919 + j) % 251
+                                     for j in range(4)]
+
+    def test_real_bugs_still_propagate(self):
+        class Boom(Exception):
+            pass
+
+        class BuggyEngine(FakeEngine):
+            def decode_one(self, st):
+                raise Boom("not a fault")
+
+        be = EngineBackend(BuggyEngine(), retries=3)
+        b = ContinuousBatcher(RoundRobin(chunk=4, min_chunk=2),
+                              queue=AdmissionQueue(max_running=2),
+                              backend=be, clock=SimClock())
+        b.submit(_requests(n=1)[0])
+        with pytest.raises(Boom):
+            while b.step():
+                pass
+
+    def test_rebuild_state_verifies_token_replay(self):
+        eng = FakeEngine()
+        be = EngineBackend(eng)
+        b = ContinuousBatcher(RoundRobin(chunk=4, min_chunk=2),
+                              queue=AdmissionQueue(max_running=2),
+                              backend=be, clock=SimClock())
+        st = b.submit(_requests(n=1, n_new=6)[0])
+        for _ in range(5):
+            b.step()
+        assert st.out_tokens                      # mid-decode
+        good = list(st.out_tokens)
+        be.rebuild_state(st)                      # replays cleanly
+        assert st.out_tokens == good
+        st.out_tokens[-1] = (st.out_tokens[-1] + 1) % 251
+        with pytest.raises(ValueError, match="diverge"):
+            be.rebuild_state(st)
+
+
+# -------------------------------------- wall-clock journal resume (fake)
+
+def test_wall_clock_journal_resumes_tokens_exactly():
+    """A wall-clock backend's measured step durations are journaled and
+    replayed via the dt override; tokens and queue contents resume
+    exactly even though 't' stamps are measurements."""
+    def build(journal=None):
+        be = EngineBackend(FakeEngine())
+        return ContinuousBatcher(RoundRobin(chunk=4, min_chunk=2),
+                                 queue=AdmissionQueue(max_running=4),
+                                 backend=be, journal=journal)
+
+    j = ServeJournal()
+    b = build(journal=j)
+    reqs = _requests(n=3, n_new=5)
+    sts = [b.submit(r) for r in reqs]
+    b._t_start = b.clock.now()
+    for _ in range(6):                            # crash mid-run
+        b.step()
+    rb = resume_from_journal(j, policy=RoundRobin(chunk=4, min_chunk=2),
+                             queue=AdmissionQueue(max_running=4),
+                             backend=EngineBackend(FakeEngine()))
+    # resumed streams picked up exactly where the crashed run stood
+    for orig, res in zip(sts, rb.queue.running + rb.queue.done):
+        assert res.out_tokens == orig.out_tokens
+        assert res.prefill_done == orig.prefill_done
+    while rb.step():
+        pass
+    for st in rb.queue.done:
+        assert st.out_tokens == [(st.request.req_id * 7919 + j) % 251
+                                 for j in range(5)]
+
+
+# ------------------------------------------- KV rebuild on the real engine
+
+def test_engine_backend_rebuild_kv_bit_identical():
+    """`EngineBackend.rebuild_state` on the real reduced model: a
+    snapshot/restore mid-decode re-derives the KV cache by replaying the
+    journaled chunk sizes, and the resumed run's remaining tokens equal
+    the uninterrupted run's bit-for-bit."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_arch, reduced
+    from repro.models import model as M
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg = reduced(get_arch("qwen2-1.5b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    rng = np.random.default_rng(7)
+    toks = [rng.integers(0, cfg.vocab_size, (1, s), dtype=np.int64)
+            for s in (22, 15)]
+
+    def build():
+        eng = Engine(cfg, params, EngineConfig(max_seq=64, min_chunk=4))
+        return ContinuousBatcher(RoundRobin(chunk=8, min_chunk=4),
+                                 queue=AdmissionQueue(max_running=4),
+                                 backend=EngineBackend(eng),
+                                 clock=SimClock())
+
+    b_full = build()
+    sts_full = [b_full.submit(Request(req_id=i, tokens=toks[i], n_new=6,
+                                      t_arrival=0.0)) for i in range(2)]
+    while b_full.step():
+        pass
+
+    b = build()
+    sts = [b.submit(Request(req_id=i, tokens=toks[i], n_new=6,
+                            t_arrival=0.0)) for i in range(2)]
+    for _ in range(7):                       # past prefill, mid-decode
+        b.step()
+    assert any(st.out_tokens for st in sts)
+    snap = json.loads(json.dumps(b.snapshot()))  # KV deliberately absent
+    eng2 = Engine(cfg, params, EngineConfig(max_seq=64, min_chunk=4))
+    rb = ContinuousBatcher.restore(snap, policy=RoundRobin(chunk=8,
+                                                           min_chunk=4),
+                                   backend=EngineBackend(eng2))
+    while rb.step():
+        pass
+    assert [st.out_tokens for st in rb.queue.done] == \
+        [st.out_tokens for st in b_full.queue.done]
