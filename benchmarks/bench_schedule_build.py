@@ -35,7 +35,21 @@ Measures, across item counts (default 10k / 100k / 1M):
     true costs are observed from a sharded replay, and
     `Schedule.observe(...).refine()` re-lowers — the simulated sharded
     makespan on the TRUE costs is asserted monotonically non-increasing
-    across the rounds and reported against the perfect-balance bound.
+    across the rounds and reported against the perfect-balance bound;
+  * the COMPILED trajectory (DESIGN.md §2.12) at the smallest size: the
+    jitted on-device schedule pipeline (`core/tiling_jax.py` — build ->
+    cost -> partition -> shard layout as one XLA executable) asserted
+    element-identical to the numpy construction and timed cold
+    (trace+compile) and warm, the jitted device `pack_csr` twin asserted
+    equal to the host pack, and the sharded SpMV kernel step at p in
+    {1, 4} consuming the device pipeline's own prefetch streams,
+    asserted bit-identical to the sequential grid. On a real TPU the
+    kernel compiles (interpret=False); on CPU the Pallas TPU lowering is
+    unavailable, so the step falls back to jit-wrapped interpret mode
+    and the record carries `interpret_fallback: true` — an honestly
+    labeled stand-in, not a compiled number. `--compiled-smoke` runs
+    ONLY this section and merges it into an existing BENCH_schedule.json
+    (the CI compiled-smoke step); `--no-compiled` skips it.
 
 Writes `BENCH_schedule.json` at the repo root so future PRs have a recorded
 trajectory to regress against, and prints one CSV line per measurement.
@@ -577,11 +591,177 @@ def bench_kernel_step(n: int, shard_ps=(1, 4)) -> dict:
     return out
 
 
+def bench_compiled(n: int, repeats: int, shard_ps=(1, 4)) -> dict:
+    """The compiled-mode trajectory (ISSUE 10 / DESIGN.md §2.12).
+
+    Three measurements, each gated on an exactness assertion so the
+    recorded numbers can never drift away from correctness:
+
+    * the jitted on-device pipeline (`tiling_jax.lower_schedule_jax`:
+      build -> cost -> partition -> shard layout) vs the numpy
+      construction chain at each p — every output (tiles, f64 tile
+      costs, LPT worker map, (p, S_B) layout, prefetch streams) asserted
+      ELEMENT-IDENTICAL before timing; cold includes trace+compile, warm
+      is the steady-state re-dispatch;
+    * the jitted device `pack_csr` twin vs the host pack (superstep-
+      padded layout), asserted equal;
+    * one sharded SpMV sweep at each p consuming the device pipeline's
+      own rowid/blkid streams, asserted bit-identical to the sequential
+      reference grid. Compiled (interpret=False) when a TPU backend is
+      present; otherwise jit-wrapped interpret mode, recorded with
+      `interpret_fallback: true`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import tiling_jax as TJ
+    from repro.kernels.ich_spmv.ich_spmv import ich_spmv, ich_spmv_sharded
+
+    sizes = workload(n)
+    indptr, indices, data = _csr(sizes)
+    costs = 1.0 + sizes.astype(np.float64)
+    B = SUPERSTEP
+    backend = jax.default_backend()
+    interp = backend != "tpu"
+    out = {"n_items": n, "backend": backend, "interpret_fallback": interp,
+           "superstep": B}
+
+    # --- jitted pipeline vs numpy construction ------------------------
+    def np_pipeline(p):
+        sched = T.build_schedule(sizes, rows_per_tile=ROWS_PER_TILE)
+        tc = sched.tile_cost(costs, sizes)
+        shards = T.shard_schedule(sched, tc, p)
+        return (sched, tc, shards, shards.shard_item_id(sched),
+                shards.kernel_block_ids())
+
+    lowerings, rows = {}, {}
+    for p in shard_ps:
+        t_np, (sched, tc, shards, rowid, blkid) = _best(
+            lambda p=p: np_pipeline(p), repeats)
+        t0 = time.perf_counter()
+        low = TJ.lower_schedule_jax(sizes, costs, p=p,
+                                    rows_per_tile=ROWS_PER_TILE)
+        jax.block_until_ready(low.block_perm)
+        t_cold = time.perf_counter() - t0
+
+        def jax_pipeline(p=p):
+            lw = TJ.lower_schedule_jax(sizes, costs, p=p,
+                                       rows_per_tile=ROWS_PER_TILE)
+            jax.block_until_ready(lw.block_perm)
+            return lw
+
+        t_warm, low = _best(jax_pipeline, repeats)
+        np.testing.assert_array_equal(np.asarray(low.schedule.item_id),
+                                      sched.item_id)
+        np.testing.assert_array_equal(np.asarray(low.schedule.seg_start),
+                                      sched.seg_start)
+        np.testing.assert_array_equal(np.asarray(low.schedule.seg_len),
+                                      sched.seg_len)
+        np.testing.assert_array_equal(np.asarray(low.tile_cost), tc)
+        np.testing.assert_array_equal(np.asarray(low.worker), shards.worker)
+        np.testing.assert_array_equal(np.asarray(low.block_perm),
+                                      shards.block_perm)
+        np.testing.assert_array_equal(np.asarray(low.rowid), rowid)
+        np.testing.assert_array_equal(np.asarray(low.blkid), blkid)
+        lowerings[p] = (sched, low)
+        rows[str(p)] = {"numpy_s": t_np, "jax_cold_s": t_cold,
+                        "jax_warm_s": t_warm,
+                        "warm_speedup": t_np / max(t_warm, 1e-12)}
+    out["pipeline"] = {
+        "asserted": "element-identical to numpy build/cost/partition/shard",
+        "p": rows}
+
+    # --- jitted device pack vs host pack ------------------------------
+    sched, low = lowerings[shard_ps[0]]
+    vp_np, cp_np = T.pack_csr(indptr, indices, data, sched, pad_tiles_to=B)
+
+    def jax_pack():
+        vp, cp = TJ.pack_csr_jax(indptr, indices, data, low.schedule,
+                                 pad_tiles_to=B)
+        jax.block_until_ready(vp)
+        return vp, cp
+
+    t0 = time.perf_counter()
+    vp, cp = jax_pack()
+    t_pcold = time.perf_counter() - t0
+    t_pwarm, (vp, cp) = _best(jax_pack, repeats)
+    t_pnp, _ = _best(lambda: T.pack_csr(indptr, indices, data, sched,
+                                        pad_tiles_to=B), repeats)
+    np.testing.assert_array_equal(np.asarray(vp), vp_np)
+    np.testing.assert_array_equal(np.asarray(cp), cp_np)
+    out["pack"] = {"asserted": "equal to host pack_csr (padded layout)",
+                   "numpy_s": t_pnp, "jax_cold_s": t_pcold,
+                   "jax_warm_s": t_pwarm}
+
+    # --- sharded kernel step on the device pipeline's streams ---------
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(sizes.size).astype(np.float32))
+    vals, cols = T.pack_csr(indptr, indices, data, sched)
+    seq = jax.jit(lambda: ich_spmv(jnp.asarray(vals), jnp.asarray(cols),
+                                   jnp.asarray(sched.item_id), x,
+                                   sizes.size, interpret=interp))
+    dt_seq, ref_out = _timed(seq)
+    krows = {}
+    for p in shard_ps:
+        _, low = lowerings[p]
+        vpp, cpp = TJ.pack_csr_jax(indptr, indices, data, low.schedule,
+                                   pad_tiles_to=B)
+        fn = jax.jit(lambda v=vpp, c=cpp, lw=low, p=p: ich_spmv_sharded(
+            v, c, lw.rowid, lw.blkid, x, sizes.size, p, B,
+            interpret=interp))
+        dt, out_p = _timed(fn)
+        np.testing.assert_array_equal(
+            np.asarray(out_p), np.asarray(ref_out),
+            err_msg=f"compiled sharded p={p} != sequential grid")
+        krows[str(p)] = {"total_s": dt,
+                         "per_tile_us": 1e6 * dt / sched.n_tiles,
+                         "vs_seq": dt_seq / dt}
+    out["kernel_step"] = {
+        "kernel": "ich_spmv_sharded",
+        "mode": "jit(interpret=True) fallback" if interp else "compiled",
+        "n_tiles": sched.n_tiles,
+        "seq": {"total_s": dt_seq,
+                "per_tile_us": 1e6 * dt_seq / sched.n_tiles},
+        "sharded": krows}
+    return out
+
+
+def _print_compiled(cm: dict) -> None:
+    for p, r in cm["pipeline"]["p"].items():
+        print(f"compiled_pipeline,n={cm['n_items']},p={p},"
+              f"numpy_s={r['numpy_s']:.5f},jax_cold_s={r['jax_cold_s']:.3f},"
+              f"jax_warm_s={r['jax_warm_s']:.5f},"
+              f"warm_speedup={r['warm_speedup']:.2f}")
+    pk = cm["pack"]
+    print(f"compiled_pack,numpy_s={pk['numpy_s']:.5f},"
+          f"jax_warm_s={pk['jax_warm_s']:.5f}")
+    ks = cm["kernel_step"]
+    line = (f"compiled_kernel,{ks['kernel']},mode={ks['mode']},"
+            f"seq_per_tile_us={ks['seq']['per_tile_us']:.1f}")
+    for p, rec in ks["sharded"].items():
+        line += f",p{p}_per_tile_us={rec['per_tile_us']:.1f}"
+    print(line)
+
+
 def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
-         kernel_step: bool = True) -> dict:
+         kernel_step: bool = True, compiled: bool = True,
+         compiled_only: bool = False) -> dict:
     if repeats < 1:
         raise ValueError(f"repeats must be >= 1, got {repeats}")
     sizes = sorted(int(s) for s in sizes)
+    out_path = Path(out_path) if out_path else ROOT / "BENCH_schedule.json"
+    if compiled_only:
+        # the CI compiled-smoke step: run ONLY the compiled section and
+        # merge it into the existing report so the uploaded
+        # BENCH_schedule.json carries both trajectories
+        report = (json.loads(out_path.read_text()) if out_path.exists()
+                  else {"benchmark": "schedule_build"})
+        cm = bench_compiled(sizes[0], repeats)
+        report["compiled"] = cm
+        _print_compiled(cm)
+        out_path.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"# wrote {out_path}")
+        return report
     report = {
         "benchmark": "schedule_build",
         "workload": "zipf(a=1.8) capped at 2000, 10% zero items, seed 1",
@@ -650,7 +830,10 @@ def main(sizes=DEFAULT_SIZES, repeats: int = 7, out_path: Path | None = None,
                 line += (f",p{p}_per_tile_us={rec['per_tile_us']:.1f}"
                          f",p{p}_speedup={rec['per_tile_speedup']:.1f}")
             print(line)
-    out_path = Path(out_path) if out_path else ROOT / "BENCH_schedule.json"
+    if compiled:
+        cm = bench_compiled(sizes[0], repeats)
+        report["compiled"] = cm
+        _print_compiled(cm)
     out_path.write_text(json.dumps(report, indent=2) + "\n")
     print(f"# wrote {out_path}")
     return report
@@ -667,7 +850,14 @@ if __name__ == "__main__":
                          "BENCH_schedule.json)")
     ap.add_argument("--no-kernel-step", action="store_true",
                     help="skip the interpret-mode kernel step measurement")
+    ap.add_argument("--no-compiled", action="store_true",
+                    help="skip the compiled-mode section")
+    ap.add_argument("--compiled-smoke", action="store_true",
+                    help="run ONLY the compiled-mode section and merge it "
+                         "into an existing BENCH_schedule.json")
     args = ap.parse_args()
     main(sizes=[int(s) for s in args.sizes.split(",")],
          repeats=args.repeats, out_path=args.out,
-         kernel_step=not args.no_kernel_step)
+         kernel_step=not args.no_kernel_step,
+         compiled=not args.no_compiled,
+         compiled_only=args.compiled_smoke)

@@ -102,7 +102,8 @@ def ich_tile_width(sizes: np.ndarray, eps: float = ICH_EPS,
     directly; the runtime walk remains correct where k_i is cumulative
     (simulator/executor/serving).
     """
-    mu = float(np.mean(sizes))
+    sizes = np.asarray(sizes)
+    mu = float(np.mean(sizes)) if sizes.size else 0.0
     upper = mu * (1.0 + eps)
     w = 2 ** int(np.ceil(np.log2(max(upper, 1.0))))
     return int(min(max(w, min_w), max_w))
@@ -447,6 +448,8 @@ class WorkerShards:
         """The (p*S, R) scalar-prefetch schedule for the sharded kernels:
         tile perm[w, s]'s item ids at row w*S + s, -1 rows on padding."""
         flat = self.perm.reshape(-1)
+        if schedule.n_tiles == 0:  # 0-tile schedule: every row is padding
+            return np.full((flat.size, schedule.rows_per_tile), -1, np.int32)
         out = np.where((flat >= 0)[:, None],
                        schedule.item_id[np.clip(flat, 0, None)],
                        np.int32(-1))
@@ -535,13 +538,20 @@ def build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
     Packing is a reshape: segments are already in pack order, so tile t's
     slots are segments [t*R, (t+1)*R) and the only real work is padding the
     segment axis out to T*R. `_reference_build_schedule` is the loop oracle.
+
+    An EMPTY sizes array yields a valid 0-tile schedule (width from the
+    band's floor): zero-item workloads (an exhausted BFS frontier, zero
+    admitted moe-dispatch tokens) must schedule as a no-op — replay,
+    executor dispatch, sharding, and kernel lowering all degenerate
+    cleanly — rather than crash the serving path.
     """
     sizes = np.asarray(sizes)
-    if sizes.size == 0:
-        raise ValueError("cannot build a schedule from an empty sizes array")
     width = _check_width(width)
     W = width if width else ich_tile_width(sizes, eps, min_w, max_w)
     R = int(rows_per_tile)
+    if sizes.size == 0:
+        empty = np.zeros((0, R), np.int32)
+        return TileSchedule(empty, empty.copy(), empty.copy(), W, 0)
     item_id, seg_start, seg_len, _ = _split_segments(sizes, W, R)
     T = item_id.size // R
     return TileSchedule(item_id.reshape(T, R), seg_start.reshape(T, R),
@@ -554,8 +564,6 @@ def _reference_build_schedule(sizes: np.ndarray, *, rows_per_tile: int = 8,
                               max_w: int = 512) -> TileSchedule:
     """Loop oracle for `build_schedule` (per-segment placement loop)."""
     sizes = np.asarray(sizes)
-    if sizes.size == 0:
-        raise ValueError("cannot build a schedule from an empty sizes array")
     width = _check_width(width)
     W = width if width else ich_tile_width(sizes, eps, min_w, max_w)
     R = int(rows_per_tile)

@@ -191,13 +191,43 @@ TABLE1: list[MatrixSpec] = [
 ]
 
 
+# Per-item share cap for synthesized hub rows, as a multiple of the mean
+# row. Naively transplanting `ratio` into a 1e4-row simulation planted
+# single rows worth ~1% of ALL work — at reduced n an item's share of
+# total work explodes far past anything in the real 5M-row matrices.
+# The binding granularity condition is chunk-shaped: a self-scheduler's
+# largest dispatch window is ~n/p^2 iterations (iCh's initial chunk), so
+# any such window must stay well under one thread's fair share
+# (mean*n/p). Both sides scale with n, so the cap is n-free:
+# deg <= HUB_DEG_CAP * mean keeps an initial-chunk window at most
+# ~HUB_DEG_CAP/p of a thread share (~0.3 at the paper's p=28). Over-cap
+# hubs are split k ways (k rows of degree/k), preserving total hub mass
+# and hence the nnz distribution's mean and skew at this scale.
+HUB_DEG_CAP = 8.0
+
+# Per-RUN share cap for hub placement. Heavy rows stay clustered in
+# contiguous runs (natural host/domain orderings — paper Fig. 1a/1b),
+# but a single run must not exceed this fraction of one thread's fair
+# share at the paper's machine width: an even initial split drops a
+# whole run into ONE worker's queue region, and a run worth multiple
+# thread-shares turns into an atomic multi-share dispatch the instant
+# any self-scheduler takes a queue-sized chunk. Real web/circuit
+# matrices cluster heavy rows in MANY per-domain runs, never one block
+# holding tens of percent of all nonzeros.
+HUB_RUN_SHARE = 0.25
+_P_REF = 28  # the paper's thread count (Table 2 evaluation width)
+
+
 def matrix_row_nnz(spec: MatrixSpec, n: int = 150_000, seed: int = 0) -> np.ndarray:
     """Sample a row-nnz sequence approximately matching (mean, ratio, sigma2).
 
     Strategy: a low-variance body (lognormal, moment-matched to the residual
     variance) plus a small set of hub rows of degree ~ ratio (power-law webs/
     circuits have few enormous rows — Fig. 1c), placed contiguously to mimic
-    natural orderings that cluster heavy rows (paper Fig. 1a/1b).
+    natural orderings that cluster heavy rows (paper Fig. 1a/1b). Hub degrees
+    and per-run masses are capped (HUB_DEG_CAP / HUB_RUN_SHARE, splitting
+    hubs across extra rows and runs, total-nnz-preserving), so reduced-n
+    sampling cannot plant paper-impossible indivisible items.
     """
     # crc32, not hash(): str hashing is randomized per process
     # (PYTHONHASHSEED), which made every matrix's sampled rows — and the
@@ -215,6 +245,13 @@ def matrix_row_nnz(spec: MatrixSpec, n: int = 150_000, seed: int = 0) -> np.ndar
         by_var = math.ceil(hub_var * n / (hub_deg**2))
         by_mass = math.floor(0.5 * mean * n / hub_deg)
         n_hubs = int(max(1, min(by_var, by_mass, n // 50)))
+        # per-item share cap: an over-cap hub row splits into k rows of
+        # degree/k (mass-preserving; see HUB_DEG_CAP above)
+        max_deg = max(mean + 1.0, HUB_DEG_CAP * mean)
+        if hub_deg > max_deg:
+            k = math.ceil(hub_deg / max_deg)
+            n_hubs = min(n_hubs * k, n // 2)
+            hub_deg = max(1.0, round(hub_deg / k))
     hub_mass = n_hubs * hub_deg / n
     body_mean = max(1.0, mean - hub_mass)
     if body_var > 0.05 * body_mean**2:
@@ -225,8 +262,18 @@ def matrix_row_nnz(spec: MatrixSpec, n: int = 150_000, seed: int = 0) -> np.ndar
         body = rng.normal(body_mean, math.sqrt(max(body_var, 1e-12)), size=n)
     nnz = np.maximum(np.round(body), 1.0)
     if n_hubs > 0:
-        start = rng.integers(0, n - n_hubs)
-        nnz[start:start + n_hubs] = hub_deg  # contiguous heavy block
+        # contiguous heavy runs, one per segment of the index space, each
+        # holding at most HUB_RUN_SHARE of a _P_REF-thread fair share
+        run_mass = HUB_RUN_SHARE * mean * n / _P_REF
+        per_run = max(1, int(run_mass / hub_deg))
+        m = math.ceil(n_hubs / per_run)
+        seg = np.linspace(0, n, m + 1).astype(np.int64)
+        left = n_hubs
+        for i in range(m):
+            take = min(per_run, left)
+            start = int(rng.integers(seg[i], max(seg[i + 1] - take, seg[i] + 1)))
+            nnz[start:start + take] = hub_deg
+            left -= take
     return nnz
 
 

@@ -22,7 +22,9 @@ Two kernel realizations share the body (see ich_spmv for the pattern):
   granularity (item-closed — no vertex spans workers), each grid step
   fetches a superstep of B tiles as one aligned (B, R, W) block straight
   from the FLAT payload via a prefetched data-dependent block index
-  (no payload reorder), every worker max-accumulates into its own row of
+  (no payload reorder) — DOUBLE-BUFFERED through 2-slot VMEM scratch so
+  step j+1's blocks stream in while step j computes (core/pipelining.py)
+  — every worker max-accumulates into its own row of
   a (p, n) block, and a pairwise tree max (`core.segmented.worker_reduce`)
   folds the accumulators — bit-identical to the sequential grid: each
   vertex is owned by one worker and all others contribute exact zeros
@@ -41,6 +43,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.pipelining import (double_buffer_scratch,
+                                   fetch_double_buffered)
 from repro.core.segmented import (emit_step_cost, segmented_apply,
                                   segmented_apply_batch, worker_reduce)
 
@@ -91,9 +95,9 @@ def ich_bfs_step(mask, cols, rowid, frontier, visited, n_vertices: int,
     )(rowid, mask, cols, frontier, visited)
 
 
-def _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
-                      visited_ref, out_ref, slotc_ref, cost_ref, *,
-                      n_vertices: int, S: int, B: int):
+def _bfs_sharded_body(rowid_ref, blkid_ref, mask_hbm, cols_hbm, slotc_hbm,
+                      frontier_ref, visited_ref, out_ref, cost_ref, bufs,
+                      sems, *, n_vertices: int, S: int, B: int):
     w, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -102,8 +106,15 @@ def _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
         if cost_ref is not None:
             cost_ref[...] = jnp.zeros_like(cost_ref)
 
-    mask = mask_ref[...]  # (B, R, W): one superstep of this worker's shard
-    cols = cols_ref[...]
+    # double-buffered data-dependent fetch (core/pipelining.py): same
+    # block bytes in the same order, so bit-identity to the sequential
+    # grid is preserved
+    hbm = (mask_hbm, cols_hbm) if slotc_hbm is None \
+        else (mask_hbm, cols_hbm, slotc_hbm)
+    blocks = fetch_double_buffered(list(zip(hbm, bufs, sems)),
+                                   blkid_ref, w, j, B=B)
+    mask = blocks[0]  # (B, R, W): one superstep of this worker's shard
+    cols = blocks[1]
     frontier = frontier_ref[...]
     visited = visited_ref[...]
     hit = jnp.max(mask * frontier[cols], axis=2)  # (B, R)
@@ -111,22 +122,25 @@ def _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
     inc = hit * (1.0 - visited[jnp.clip(rows, 0, n_vertices - 1)])
     segmented_apply_batch(out_ref, rows, inc, combine="max")
     if cost_ref is not None:
-        emit_step_cost(cost_ref, rows, slotc_ref[...], j)
+        emit_step_cost(cost_ref, rows, blocks[2], j)
 
 
-def _bfs_kernel_sharded(rowid_ref, blkid_ref, mask_ref, cols_ref,
-                        frontier_ref, visited_ref, out_ref, *,
-                        n_vertices: int, S: int, B: int):
-    _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
-                      visited_ref, out_ref, None, None,
+def _bfs_kernel_sharded(rowid_ref, blkid_ref, mask_hbm, cols_hbm,
+                        frontier_ref, visited_ref, out_ref, mbuf, cbuf,
+                        msem, csem, *, n_vertices: int, S: int, B: int):
+    _bfs_sharded_body(rowid_ref, blkid_ref, mask_hbm, cols_hbm, None,
+                      frontier_ref, visited_ref, out_ref, None,
+                      (mbuf, cbuf), (msem, csem),
                       n_vertices=n_vertices, S=S, B=B)
 
 
-def _bfs_kernel_sharded_cost(rowid_ref, blkid_ref, mask_ref, cols_ref,
-                             slotc_ref, frontier_ref, visited_ref, out_ref,
-                             cost_ref, *, n_vertices: int, S: int, B: int):
-    _bfs_sharded_body(rowid_ref, mask_ref, cols_ref, frontier_ref,
-                      visited_ref, out_ref, slotc_ref, cost_ref,
+def _bfs_kernel_sharded_cost(rowid_ref, blkid_ref, mask_hbm, cols_hbm,
+                             slotc_hbm, frontier_ref, visited_ref, out_ref,
+                             cost_ref, mbuf, cbuf, sbuf, msem, csem, ssem,
+                             *, n_vertices: int, S: int, B: int):
+    _bfs_sharded_body(rowid_ref, blkid_ref, mask_hbm, cols_hbm, slotc_hbm,
+                      frontier_ref, visited_ref, out_ref, cost_ref,
+                      (mbuf, cbuf, sbuf), (msem, csem, ssem),
                       n_vertices=n_vertices, S=S, B=B)
 
 
@@ -151,22 +165,22 @@ def ich_bfs_step_sharded(mask, cols, rowid, blkid, frontier, visited,
         raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
                          f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
     emit = slot_cost is not None
+    # payloads stay whole in ANY memory; the kernel double-buffers the
+    # data-dependent superstep blocks through 2-slot VMEM scratch
+    # (core/pipelining.py)
     in_specs = [
-        pl.BlockSpec((B, R, W),
-                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                               0, 0)),
-        pl.BlockSpec((B, R, W),
-                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                               0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # mask (T_pad, R, W)
+        pl.BlockSpec(memory_space=pltpu.ANY),  # cols (T_pad, R, W)
     ]
+    db_streams = [((R, W), mask.dtype), ((R, W), jnp.int32)]
     out_specs = pl.BlockSpec((1, n_vertices),
                              lambda w, j, rowid, blk: (w, 0))
     out_shape = jax.ShapeDtypeStruct((p, n_vertices), frontier.dtype)
     if emit:
         kernel = functools.partial(_bfs_kernel_sharded_cost,
                                    n_vertices=n_vertices, S=S, B=B)
-        in_specs.append(pl.BlockSpec(
-            (B, R), lambda w, j, rowid, blk: (blk[w * (S // B) + j], 0)))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # slot costs
+        db_streams.append(((R,), jnp.float32))
         out_specs = [out_specs, pl.BlockSpec(
             (1, n_steps), lambda w, j, rowid, blk: (w, 0))]
         out_shape = [out_shape,
@@ -185,6 +199,7 @@ def ich_bfs_step_sharded(mask, cols, rowid, blkid, frontier, visited,
             grid=(p, n_steps),
             in_specs=in_specs,
             out_specs=out_specs,
+            scratch_shapes=double_buffer_scratch(B, db_streams),
         ),
         out_shape=out_shape,
         # workers are independent (item-closed partition): the shard

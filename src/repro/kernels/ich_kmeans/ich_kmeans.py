@@ -27,6 +27,12 @@ Two kernel realizations share the body (see ich_spmv for the pattern):
   to the sequential grid: assignments are >= 0, each point is stored by
   exactly one worker, and every other worker holds the zero-initialized
   identity.
+
+Unlike the SpMV/BFS/MoE sharded kernels, this one needs no manual
+double-buffering (`core/pipelining.py`): its block streams are AFFINE in
+the grid step (the whole point/centroid tables sit in VMEM; the point
+gather indexes through SMEM scalars, not a data-dependent payload block),
+so Mosaic's automatic pipeliner already overlaps fetch and compute.
 """
 from __future__ import annotations
 

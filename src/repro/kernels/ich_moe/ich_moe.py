@@ -11,7 +11,9 @@ after cost partitioning no WORKER — is overloaded by router skew.
 `ich_moe_sharded` is the worker-sharded 2D realization (DESIGN.md §2.6
 applied to §2.8): grid (p, S_B), each grid step fetches one superstep of
 B tiles straight out of the flat payload via the prefetched block-index
-stream, applies the gated expert FFN to every (expert-slot, token-slot)
+stream — double-buffered through 2-slot VMEM scratch so step j+1's
+blocks stream in while step j computes (core/pipelining.py) — applies
+the gated expert FFN to every (expert-slot, token-slot)
 pair of the block, and scatters the weighted outputs into this worker's
 private (1, n_tokens, D) accumulator with a one-hot matmul (tokens are
 NOT item-closed across workers — a token's K experts may live on
@@ -44,15 +46,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.pipelining import (double_buffer_scratch,
+                                   fetch_double_buffered)
 from repro.core.segmented import (emit_step_cost, segmented_apply_batch,
                                   worker_reduce)
 
 __all__ = ["ich_moe_sharded"]
 
 
-def _moe_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, wi_ref, wg_ref,
-                      wo_ref, out_ref, slotc_ref, cost_ref, ecost_ref, *,
-                      S: int, B: int):
+def _moe_sharded_body(rowid_ref, blkid_ref, vals_hbm, cols_hbm, slotc_hbm,
+                      x_ref, wi_ref, wg_ref, wo_ref, out_ref, cost_ref,
+                      ecost_ref, bufs, sems, *, S: int, B: int):
     w, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -62,9 +66,14 @@ def _moe_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, wi_ref, wg_ref,
             cost_ref[...] = jnp.zeros_like(cost_ref)
             ecost_ref[...] = jnp.zeros_like(ecost_ref)
 
-    vals = vals_ref[...]  # (B, R, W): one superstep of combine weights
-    cols = cols_ref[...]  # (B, R, W): token ids (0 on padding, vals 0)
-    x = x_ref[...]        # (n_tokens, D)
+    # double-buffered data-dependent fetch (core/pipelining.py)
+    hbm = (vals_hbm, cols_hbm) if slotc_hbm is None \
+        else (vals_hbm, cols_hbm, slotc_hbm)
+    blocks = fetch_double_buffered(list(zip(hbm, bufs, sems)),
+                                   blkid_ref, w, j, B=B)
+    vals = blocks[0]  # (B, R, W): one superstep of combine weights
+    cols = blocks[1]  # (B, R, W): token ids (0 on padding, vals 0)
+    x = x_ref[...]    # (n_tokens, D)
     rows = rowid_ref[pl.ds(w * S + j * B, B)]  # (B, R) expert ids, -1 pad
     e = jnp.maximum(rows, 0)
 
@@ -94,7 +103,7 @@ def _moe_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, wi_ref, wg_ref,
                             preferred_element_type=jnp.float32)[None]
 
     if cost_ref is not None:
-        slotc = slotc_ref[...]  # (B, R) scheduled per-slot costs
+        slotc = blocks[2]  # (B, R) scheduled per-slot costs
         emit_step_cost(cost_ref, rows, slotc, j)
         # per-expert totals: expert ids are the schedule's item ids, so
         # the windowed segmented epilogue applies directly
@@ -102,18 +111,21 @@ def _moe_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, wi_ref, wg_ref,
         segmented_apply_batch(ecost_ref, rows, masked, combine="add")
 
 
-def _moe_kernel_sharded(rowid_ref, blkid_ref, vals_ref, cols_ref, x_ref,
-                        wi_ref, wg_ref, wo_ref, out_ref, *, S: int, B: int):
-    _moe_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, wi_ref, wg_ref,
-                      wo_ref, out_ref, None, None, None, S=S, B=B)
+def _moe_kernel_sharded(rowid_ref, blkid_ref, vals_hbm, cols_hbm, x_ref,
+                        wi_ref, wg_ref, wo_ref, out_ref, vbuf, cbuf, vsem,
+                        csem, *, S: int, B: int):
+    _moe_sharded_body(rowid_ref, blkid_ref, vals_hbm, cols_hbm, None,
+                      x_ref, wi_ref, wg_ref, wo_ref, out_ref, None, None,
+                      (vbuf, cbuf), (vsem, csem), S=S, B=B)
 
 
-def _moe_kernel_sharded_cost(rowid_ref, blkid_ref, vals_ref, cols_ref,
-                             slotc_ref, x_ref, wi_ref, wg_ref, wo_ref,
-                             out_ref, cost_ref, ecost_ref, *, S: int,
-                             B: int):
-    _moe_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, wi_ref, wg_ref,
-                      wo_ref, out_ref, slotc_ref, cost_ref, ecost_ref,
+def _moe_kernel_sharded_cost(rowid_ref, blkid_ref, vals_hbm, cols_hbm,
+                             slotc_hbm, x_ref, wi_ref, wg_ref, wo_ref,
+                             out_ref, cost_ref, ecost_ref, vbuf, cbuf,
+                             sbuf, vsem, csem, ssem, *, S: int, B: int):
+    _moe_sharded_body(rowid_ref, blkid_ref, vals_hbm, cols_hbm, slotc_hbm,
+                      x_ref, wi_ref, wg_ref, wo_ref, out_ref, cost_ref,
+                      ecost_ref, (vbuf, cbuf, sbuf), (vsem, csem, ssem),
                       S=S, B=B)
 
 
@@ -143,21 +155,21 @@ def ich_moe_sharded(vals, cols, rowid, blkid, x, wi, wg, wo, p: int,
         raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
                          f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
     emit = slot_cost is not None
+    # payloads stay whole in ANY memory; the kernel double-buffers the
+    # data-dependent superstep blocks through 2-slot VMEM scratch
+    # (core/pipelining.py)
     in_specs = [
-        pl.BlockSpec((B, R, W),
-                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                               0, 0)),
-        pl.BlockSpec((B, R, W),
-                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                               0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # vals (T_pad, R, W)
+        pl.BlockSpec(memory_space=pltpu.ANY),  # cols (T_pad, R, W)
     ]
+    db_streams = [((R, W), vals.dtype), ((R, W), jnp.int32)]
     out_specs = pl.BlockSpec((1, n_tokens, D),
                              lambda w, j, rowid, blk: (w, 0, 0))
     out_shape = jax.ShapeDtypeStruct((p, n_tokens, D), jnp.float32)
     if emit:
         kernel = functools.partial(_moe_kernel_sharded_cost, S=S, B=B)
-        in_specs.append(pl.BlockSpec(
-            (B, R), lambda w, j, rowid, blk: (blk[w * (S // B) + j], 0)))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # slot costs
+        db_streams.append(((R,), jnp.float32))
         out_specs = [out_specs,
                      pl.BlockSpec((1, n_steps),
                                   lambda w, j, rowid, blk: (w, 0)),
@@ -180,6 +192,7 @@ def ich_moe_sharded(vals, cols, rowid, blkid, x, wi, wg, wo, p: int,
         grid=(p, n_steps),
         in_specs=in_specs,
         out_specs=out_specs,
+        scratch_shapes=double_buffer_scratch(B, db_streams),
     )
     call = pl.pallas_call(
         kernel,

@@ -22,7 +22,10 @@ Two kernel realizations share the body:
   out of the FLAT payload via a prefetched data-dependent block index
   (`WorkerShards.kernel_block_ids`; lowering moves no payload bytes) —
   with B in-order windowed RMWs, amortizing per-step dispatch/prefetch
-  overhead. Every worker accumulates into its own row of a (p, n_rows)
+  overhead. The payload fetch is DOUBLE-BUFFERED (`core/pipelining.py`):
+  step j+1's blocks DMA into the spare VMEM slot while step j computes,
+  restoring the fetch/compute overlap Mosaic cannot derive for a
+  data-dependent block index. Every worker accumulates into its own row of a (p, n_rows)
   output block (no cross-worker races; the worker dimension is declared
   "parallel" so Mosaic may split it across TPU cores), and a host-side
   pairwise tree reduce (`core.segmented.worker_reduce`) folds the
@@ -45,6 +48,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.pipelining import (double_buffer_scratch,
+                                   fetch_double_buffered)
 from repro.core.segmented import (emit_step_cost, segmented_apply,
                                   segmented_apply_batch, worker_reduce)
 from repro.core.tiling import build_schedule, ich_tile_width, pack_csr
@@ -109,8 +114,9 @@ def ich_spmv(vals, cols, rowid, x, n_rows: int, *, interpret: bool = False):
     )(rowid, vals, cols, x)
 
 
-def _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
-                       slotc_ref, cost_ref, *, S: int, B: int):
+def _spmv_sharded_body(rowid_ref, blkid_ref, vals_hbm, cols_hbm, slotc_hbm,
+                       x_ref, out_ref, cost_ref, bufs, sems, *, S: int,
+                       B: int):
     w, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -119,8 +125,16 @@ def _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
         if cost_ref is not None:
             cost_ref[...] = jnp.zeros_like(cost_ref)
 
-    vals = vals_ref[...]  # (B, R, W): one superstep of this worker's shard
-    cols = cols_ref[...]
+    # double-buffered data-dependent fetch: superstep s+1's blocks stream
+    # in while s computes (core/pipelining.py); same block bytes in the
+    # same order as the single-buffered lowering, so results are
+    # bit-identical to the sequential grid
+    hbm = (vals_hbm, cols_hbm) if slotc_hbm is None \
+        else (vals_hbm, cols_hbm, slotc_hbm)
+    blocks = fetch_double_buffered(list(zip(hbm, bufs, sems)),
+                                   blkid_ref, w, j, B=B)
+    vals = blocks[0]  # (B, R, W): one superstep of this worker's shard
+    cols = blocks[1]
     x = x_ref[...]  # (n,)
     partial = jnp.sum(vals * x[cols], axis=2)  # (B, R)
     rows = rowid_ref[pl.ds(w * S + j * B, B)]  # (B, R) SMEM scalars
@@ -128,20 +142,23 @@ def _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
     # same fold order the sequential grid uses for these tiles
     segmented_apply_batch(out_ref, rows, partial, combine="add")
     if cost_ref is not None:
-        emit_step_cost(cost_ref, rows, slotc_ref[...], j)
+        emit_step_cost(cost_ref, rows, blocks[2], j)
 
 
-def _spmv_kernel_sharded(rowid_ref, blkid_ref, vals_ref, cols_ref, x_ref,
-                         out_ref, *, S: int, B: int):
-    _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
-                       None, None, S=S, B=B)
+def _spmv_kernel_sharded(rowid_ref, blkid_ref, vals_hbm, cols_hbm, x_ref,
+                         out_ref, vbuf, cbuf, vsem, csem, *, S: int, B: int):
+    _spmv_sharded_body(rowid_ref, blkid_ref, vals_hbm, cols_hbm, None,
+                       x_ref, out_ref, None, (vbuf, cbuf), (vsem, csem),
+                       S=S, B=B)
 
 
-def _spmv_kernel_sharded_cost(rowid_ref, blkid_ref, vals_ref, cols_ref,
-                              slotc_ref, x_ref, out_ref, cost_ref, *,
-                              S: int, B: int):
-    _spmv_sharded_body(rowid_ref, vals_ref, cols_ref, x_ref, out_ref,
-                       slotc_ref, cost_ref, S=S, B=B)
+def _spmv_kernel_sharded_cost(rowid_ref, blkid_ref, vals_hbm, cols_hbm,
+                              slotc_hbm, x_ref, out_ref, cost_ref, vbuf,
+                              cbuf, sbuf, vsem, csem, ssem, *, S: int,
+                              B: int):
+    _spmv_sharded_body(rowid_ref, blkid_ref, vals_hbm, cols_hbm, slotc_hbm,
+                       x_ref, out_ref, cost_ref, (vbuf, cbuf, sbuf),
+                       (vsem, csem, ssem), S=S, B=B)
 
 
 def ich_spmv_sharded(vals, cols, rowid, blkid, x, n_rows: int, p: int,
@@ -167,22 +184,20 @@ def ich_spmv_sharded(vals, cols, rowid, blkid, x, n_rows: int, p: int,
         raise ValueError(f"shard layout mismatch: blkid {blkid.shape}, "
                          f"rowid {rowid.shape}, T_pad={T_pad}, p={p}, B={B}")
     emit = slot_cost is not None
+    # data-dependent superstep payloads stay whole in ANY memory; the
+    # kernel double-buffers them through 2-slot VMEM scratch so step j+1's
+    # blocks stream in while step j computes (core/pipelining.py)
     in_specs = [
-        # data-dependent superstep fetch: worker w's j-th block of B
-        # tiles, read straight from the flat payload
-        pl.BlockSpec((B, R, W),
-                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                               0, 0)),
-        pl.BlockSpec((B, R, W),
-                     lambda w, j, rowid, blk: (blk[w * (S // B) + j],
-                                               0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # vals (T_pad, R, W)
+        pl.BlockSpec(memory_space=pltpu.ANY),  # cols (T_pad, R, W)
     ]
+    db_streams = [((R, W), vals.dtype), ((R, W), jnp.int32)]
     out_specs = pl.BlockSpec((1, n_rows), lambda w, j, rowid, blk: (w, 0))
     out_shape = jax.ShapeDtypeStruct((p, n_rows), x.dtype)
     if emit:
         kernel = functools.partial(_spmv_kernel_sharded_cost, S=S, B=B)
-        in_specs.append(pl.BlockSpec(
-            (B, R), lambda w, j, rowid, blk: (blk[w * (S // B) + j], 0)))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # slot costs
+        db_streams.append(((R,), jnp.float32))
         out_specs = [out_specs, pl.BlockSpec(
             (1, n_steps), lambda w, j, rowid, blk: (w, 0))]
         out_shape = [out_shape,
@@ -195,6 +210,7 @@ def ich_spmv_sharded(vals, cols, rowid, blkid, x, n_rows: int, p: int,
         grid=(p, n_steps),
         in_specs=in_specs,
         out_specs=out_specs,
+        scratch_shapes=double_buffer_scratch(B, db_streams),
     )
     call = pl.pallas_call(
         kernel,

@@ -488,8 +488,14 @@ def _prefill_encdec(cfg, params, x, enc_out, dist):
 
 
 def extend_cache_specs_ok(cfg) -> bool:
-    """True when `prefill_extend` supports this family (stacked attention
-    segments whose cache is per-segment (L,B,S,Hkv,dh) K/V)."""
+    """True when `prefill_extend` supports this family: stacked attention
+    segments whose cache is per-segment (L,B,S,Hkv,dh) K/V, or pure
+    recurrent stacks (ssm) whose O(1) block states thread chunk to
+    chunk."""
+    if cfg.family == "ssm":
+        # an attention block in the pattern would need windowed-KV
+        # extension — the hybrid family stays on the prefix-rerun path
+        return all(k in ("M", "X", "S") for k in cfg.block_pattern)
     return cfg.family in ("dense", "vlm", "moe")
 
 
@@ -499,7 +505,23 @@ def empty_extend_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
     max_seq) is what makes chunked extension bit-identical to a one-shot
     prefill: the final chunk's attention reduces over the same Skv, with
     the not-yet-written tail excluded by the causal mask (scores at
-    NEG_INF underflow to exact 0.0 weight)."""
+    NEG_INF underflow to exact 0.0 weight).
+
+    ssm family: recurrent blocks carry O(1) state, not a (seq,) cache —
+    the zero state IS what a from-scratch scan starts from, so the first
+    chunk already matches a one-shot prefill's opening scan steps."""
+    if cfg.family == "ssm":
+        def zeros(spec):
+            return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        states = []
+        for kind in cfg.block_pattern:
+            if kind == "M":
+                states.append(zeros(SS.mamba2_state_spec(cfg, batch, dtype)))
+            elif kind == "X":
+                states.append(zeros(SS.mlstm_state_spec(cfg, batch)))
+            else:  # "S"
+                states.append(zeros(SS.slstm_state_spec(cfg, batch)))
+        return states
     hkv, dh = cfg.n_kv_heads, cfg.dh
     return [{"k": jnp.zeros((cnt, batch, seq, hkv, dh), dtype),
              "v": jnp.zeros((cnt, batch, seq, hkv, dh), dtype)}
@@ -507,7 +529,7 @@ def empty_extend_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
 
 
 def prefill_extend(cfg, params, tokens, cache, done, cap_scales=None, *,
-                   dist=None, dtype=jnp.bfloat16):
+                   dist=None, dtype=jnp.bfloat16, ssm_chunk=None):
     """Incremental chunked prefill: run ONLY the new chunk against the
     growing cache — O(chunk * context) work per chunk instead of the
     O(prefix^2) of re-running the whole prefix every chunk.
@@ -523,9 +545,17 @@ def prefill_extend(cfg, params, tokens, cache, done, cap_scales=None, *,
     chunk's rows match the full run's rows exactly; the attention softmax
     reduces over the same cache-length Skv with identical masked entries.
     MoE layers dispatch dropless (per-token, no cross-token capacity
-    competition) exactly like `prefill`. Only text-token families with
-    stacked segments are supported (`extend_cache_specs_ok`); hybrid/ssm
-    recurrent state and encoder caches don't extend this way.
+    competition) exactly like `prefill`. Supported families are listed by
+    `extend_cache_specs_ok`: stacked attention segments, plus the ssm
+    family, whose recurrent block states (mamba2 conv+ssm, mLSTM matrix,
+    sLSTM h/c) thread from chunk to chunk. For ssm the bit-identity
+    condition is scan-block alignment: `ssm_chunk` must be the one-shot
+    run's Q = min(cfg.ssm_chunk, prompt_len) and every chunk boundary a
+    multiple of it (the serving engine enforces both) — then each call
+    replays exactly the scan steps the one-shot `chunked_gated_scan`
+    would run, final partial chunk padded identically. Hybrid recurrent
+    state (attention blocks in the pattern) and encoder caches still
+    don't extend this way.
     """
     if not extend_cache_specs_ok(cfg):
         raise NotImplementedError(
@@ -536,6 +566,30 @@ def prefill_extend(cfg, params, tokens, cache, done, cap_scales=None, *,
     if cfg.rope_theta == 0.0 and "pos" in params["embed"]:
         x = x + jax.lax.dynamic_slice_in_dim(
             params["embed"]["pos"], done, C, 0)[None].astype(dtype)
+
+    if cfg.family == "ssm":
+        Q = int(ssm_chunk) if ssm_chunk else getattr(cfg, "ssm_chunk", 256)
+        new_states = []
+        for i, kind in enumerate(cfg.block_pattern):
+            p = params["blocks"][i]
+            xin = A_norm(cfg, p["ln1"], x)
+            if kind == "M":
+                h, ns = SS.apply_mamba2(cfg, p["mamba"], xin,
+                                        state=cache[i], chunk=Q,
+                                        exact_chunk=True)
+            elif kind == "X":
+                h, ns = SS.apply_mlstm(cfg, p["mlstm"], xin,
+                                       state=cache[i], chunk=Q,
+                                       exact_chunk=True)
+            else:  # "S": plain lax.scan, exact at any boundary
+                h, ns = SS.apply_slstm(cfg, p["slstm"], xin, state=cache[i])
+            x = x + h
+            x = _constrain(x, dist)
+            new_states.append(ns)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.lm_logits(cfg, params["embed"], x[:, -1])
+        return logits, new_states
+
     positions = done + jnp.arange(C)
 
     new_cache = []

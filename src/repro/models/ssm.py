@@ -29,14 +29,23 @@ from . import layers as L
 # Generic chunked gated scan
 # ----------------------------------------------------------------------------
 
-def chunked_gated_scan(q, k, v, log_a, state=None, chunk: int = 256):
+def chunked_gated_scan(q, k, v, log_a, state=None, chunk: int = 256, *,
+                       exact_chunk: bool = False):
     """q,k: (B,S,H,N); v: (B,S,H,Pd); log_a: (B,S,H) (<= 0).
 
     Returns y (B,S,H,Pd), final state (B,H,Pd,N). fp32 state math.
+
+    With `exact_chunk` the scan-block length Q is `chunk` EXACTLY (padding
+    S up to it when shorter) instead of min(chunk, S): an incremental
+    prefill feeding Q-aligned slices through `state` then replays the same
+    scan steps as one call over the whole sequence, bit for bit
+    (models/model.py `prefill_extend`). Chunking is NOT reassociation-free
+    in general — two calls only agree bitwise when their Q and chunk
+    boundaries coincide.
     """
     B, S, H, N = q.shape
     Pd = v.shape[-1]
-    Q = min(chunk, S)
+    Q = int(chunk) if exact_chunk else min(chunk, S)
     pad = (-S) % Q
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -145,9 +154,14 @@ def mamba2_pspec(cfg, tp: int = 16):
     }
 
 
-def apply_mamba2(cfg, p, x, state=None, *, chunk: int = None):
+def apply_mamba2(cfg, p, x, state=None, *, chunk: int = None,
+                 exact_chunk: bool = False):
     """x (B,S,D). state: None (train/prefill from scratch) or dict with
-    'conv' (B,K-1,d_in) and 'ssm' (B,H,hd,N) for streaming/decode."""
+    'conv' (B,K-1,d_in) and 'ssm' (B,H,hd,N) for streaming/decode.
+
+    `exact_chunk` forces the chunked scan with scan-block length exactly
+    `chunk` (bypassing the single-token recurrence, whose op order
+    differs): the incremental-prefill mode (see `chunked_gated_scan`)."""
     B, S, D = x.shape
     d_in = cfg.mamba_expand * D
     N, hd = cfg.ssm_state, cfg.ssm_head_dim
@@ -169,11 +183,12 @@ def apply_mamba2(cfg, p, x, state=None, *, chunk: int = None):
     q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
     v = xh * dt.astype(xh.dtype)[..., None]
     ssm_prev = None if state is None else state["ssm"]
-    if S == 1 and ssm_prev is not None:
+    if S == 1 and ssm_prev is not None and not exact_chunk:
         y, ssm = gated_scan_step(q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], ssm_prev)
         y = y[:, None]
     else:
-        y, ssm = chunked_gated_scan(q, k, v, log_a, state=ssm_prev, chunk=chunk)
+        y, ssm = chunked_gated_scan(q, k, v, log_a, state=ssm_prev,
+                                    chunk=chunk, exact_chunk=exact_chunk)
     y = y + xh * p["D"][None, None, :, None]
     y = y.reshape(B, S, d_in) * jax.nn.silu(z)
     yf = y.astype(jnp.float32)
@@ -226,9 +241,10 @@ def mlstm_pspec(cfg, tp: int = 16):
     }
 
 
-def apply_mlstm(cfg, p, x, state=None, *, chunk: int = None):
+def apply_mlstm(cfg, p, x, state=None, *, chunk: int = None,
+                exact_chunk: bool = False):
     """x (B,S,D) -> (y, state). state: (B,H,dh+1,dh) fp32 (normalizer folded
-    as the extra v channel)."""
+    as the extra v channel). `exact_chunk` as in `apply_mamba2`."""
     B, S, D = x.shape
     d_in = cfg.mamba_expand * D
     H = cfg.n_heads
@@ -244,11 +260,12 @@ def apply_mlstm(cfg, p, x, state=None, *, chunk: int = None):
     log_a = jnp.log(fg + 1e-9)
     kk = k * ig.astype(k.dtype)[..., None]
     v1 = jnp.concatenate([v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)
-    if S == 1 and state is not None:
+    if S == 1 and state is not None and not exact_chunk:
         y1, st = gated_scan_step(q[:, 0], kk[:, 0], v1[:, 0], log_a[:, 0], state)
         y1 = y1[:, None]
     else:
-        y1, st = chunked_gated_scan(q, kk, v1, log_a, state=state, chunk=chunk)
+        y1, st = chunked_gated_scan(q, kk, v1, log_a, state=state,
+                                    chunk=chunk, exact_chunk=exact_chunk)
     num, den = y1[..., :dh], y1[..., dh:]
     y = num / jnp.maximum(jnp.abs(den), 1.0)
     y = y.reshape(B, S, d_in) * jax.nn.silu(z)

@@ -116,6 +116,10 @@ class CostRefiner:
         their estimated mass; an item counts as covered when any of its
         estimate mass (or, for zero-estimate items, any of its work) was
         inside the observed chunks."""
+        # bincount over an EMPTY observation returns int64 regardless of
+        # its weights dtype; keep the arithmetic in float64 either way
+        per_item = np.asarray(per_item, np.float64)
+        est_covered = np.asarray(est_covered, np.float64)
         covered = est_covered > 0
         frac = np.divide(est_covered, self.est,
                          out=np.ones_like(est_covered),

@@ -55,6 +55,8 @@ def _sharded_slot_cost(schedule: Schedule, shards) -> np.ndarray:
     """The (p*S, R) per-slot cost stream in SHARD layout for kernels with
     no flat-payload indirection (K-Means); padding rows are zero."""
     flat = shards.perm.reshape(-1)
+    if schedule.n_tiles == 0:  # 0-tile schedule: all rows are padding
+        return np.zeros((flat.size, schedule.rows_per_tile), np.float32)
     sc = schedule.slot_cost()
     out = np.where((flat >= 0)[:, None], sc[np.clip(flat, 0, None)], 0.0)
     return np.ascontiguousarray(out, np.float32)
@@ -66,6 +68,13 @@ class _ObservableOp:
 
     schedule: Schedule
     last_costs = None  # (p, S_B) device array from the latest invocation
+
+    def _empty_costs(self):
+        """Zero (p, S_B) cost stream for a 0-tile schedule: an empty
+        workload lowers as a no-op — no kernel launch, no payload fetch —
+        but the op still reports a well-shaped (all-zero) cost stream."""
+        import jax.numpy as jnp
+        return jnp.zeros(self.shards.block_perm.shape, jnp.float32)
 
     def observe(self) -> Schedule:
         """Fold the latest invocation's per-worker, per-superstep cost
@@ -112,7 +121,11 @@ class SpmvOp(_ObservableOp):
 
     def __call__(self, x, interpret: bool | None = None):
         import jax
+        import jax.numpy as jnp
         from repro.kernels.ich_spmv.ich_spmv import ich_spmv_sharded
+        if self.schedule.n_tiles == 0:
+            self.last_costs = self._empty_costs()
+            return jnp.zeros((self.n_rows,), jnp.float32)
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(
@@ -152,6 +165,9 @@ class BfsOp(_ObservableOp):
         import jax
         import jax.numpy as jnp
         from repro.kernels.ich_bfs.ich_bfs import ich_bfs_step_sharded
+        if self.schedule.n_tiles == 0:
+            self.last_costs = self._empty_costs()
+            return jnp.zeros((self.n,), jnp.float32)
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(
@@ -202,6 +218,9 @@ class KMeansOp(_ObservableOp):
         import jax.numpy as jnp
         from repro.kernels.ich_kmeans.ich_kmeans import \
             ich_kmeans_assign_sharded
+        if self.schedule.n_tiles == 0:
+            self.last_costs = self._empty_costs()
+            return jnp.zeros((self.n,), jnp.int32)
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(
@@ -254,7 +273,16 @@ class MoeDispatchOp(_ObservableOp):
         """Apply the planned dispatch: x (n_tokens, D) token activations,
         wi/wg (E, D, F), wo (E, F, D). Returns y (n_tokens, D)."""
         import jax
+        import jax.numpy as jnp
         from repro.kernels.ich_moe.ich_moe import ich_moe_sharded
+        # n_tokens == 0 also short-circuits: a zero-admission plan still
+        # carries one tile per (zero-count) expert, but the kernel's token
+        # gather has no source rows to read
+        if self.schedule.n_tiles == 0 or self.n_tokens == 0:
+            self.last_costs = self._empty_costs()
+            self.last_expert_costs = jnp.zeros(
+                (self.p, self.n_experts), jnp.float32)
+            return jnp.zeros((self.n_tokens, x.shape[-1]), x.dtype)
         interpret = _default_interpret(interpret)
         if interpret not in self._jitted:
             self._jitted[interpret] = jax.jit(functools.partial(

@@ -482,6 +482,10 @@ class ContinuousBatcher:
             self.metrics.n_backend_retries = self.backend.n_retries
             if self.backend.breaker is not None:
                 self.metrics.n_breaker_trips = self.backend.breaker.n_trips
+        # surface any O(n^2) prefix-rerun prefill chunks the engine took
+        eng = getattr(self.backend, "engine", None)
+        if eng is not None and hasattr(eng, "n_prefill_fallbacks"):
+            self.metrics.n_prefill_fallback = eng.n_prefill_fallbacks
         self.policy.observe(plan, dt)
         # ---- retire finished streams ----
         for st in list(self.queue.running):

@@ -15,8 +15,15 @@ moe): each chunk feeds only its own tokens through `models.prefill_extend`
 against the growing KV cache — O(chunk * context) per chunk instead of
 re-running the whole prefix — and stays bit-identical to a one-shot
 prefill because the cache is sized to the exact prompt length (see
-`empty_extend_cache`). Families whose state doesn't extend this way
-(encdec / hybrid / ssm) fall back to re-running the prefix.
+`empty_extend_cache`). The ssm family is incremental too — O(chunk) per
+chunk through its O(1) recurrent block states — with chunk boundaries
+quantized to the one-shot scan-block length Q = min(cfg.ssm_chunk, S) so
+every chunk replays exactly the scan steps a one-shot prefill would run
+(bit-identity, `_ssm_q`). Families whose state still doesn't extend
+(encdec / hybrid) fall back to re-running the prefix — QUADRATIC in the
+prompt, so every fallback chunk is counted loudly in
+`Engine.n_prefill_fallbacks` and surfaces as
+`ServeMetrics.n_prefill_fallback`.
 
 Two usage surfaces:
 
@@ -65,11 +72,18 @@ class Engine:
             lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos, caps,
                                                dtype=jnp.float32))
         if M.extend_cache_specs_ok(cfg):
+            # q (the ssm scan-block length) is static: it shapes the
+            # chunked scan; None for attention families
             self._extend = jax.jit(
-                lambda p, t, c, done: M.prefill_extend(
-                    cfg, p, t, c, done, caps, dtype=jnp.float32))
+                lambda p, t, c, done, q=None: M.prefill_extend(
+                    cfg, p, t, c, done, caps, dtype=jnp.float32,
+                    ssm_chunk=q),
+                static_argnums=(4,))
         else:
             self._extend = None
+        # every prefix-rerun fallback chunk (encdec/hybrid) is counted:
+        # the O(n^2) path must be visible, never silent
+        self.n_prefill_fallbacks = 0
         # iCh state: divisor d + completed-token counters per "worker"
         # (here: per prefill stream) — the single-request surface; the
         # batcher path keeps this state per request on RequestState
@@ -77,8 +91,19 @@ class Engine:
         self.ks: list[float] = []
 
     # ---------------- iCh chunked prefill ----------------
-    def _next_chunk(self, remaining: int) -> int:
+    def _ssm_q(self, prompt_len: int):
+        """Scan-block quantum for ssm prompts, else None. The one-shot
+        prefill scans in Q = min(cfg.ssm_chunk, S) blocks; incremental
+        chunk boundaries must land on multiples of Q to replay the same
+        scan steps (bit-identity — see `models.prefill_extend`)."""
+        if self.cfg.family != "ssm":
+            return None
+        return min(getattr(self.cfg, "ssm_chunk", 256), int(prompt_len))
+
+    def _next_chunk(self, remaining: int, q: int = None) -> int:
         c = max(self.ecfg.min_chunk, int(np.ceil(remaining / self.d)))
+        if q:
+            c = -(-c // q) * q  # round up to the ssm scan-block quantum
         return min(c, remaining)
 
     def _adapt(self, tokens_done: int, dt: float):
@@ -95,18 +120,21 @@ class Engine:
         done = 0
         logits = None
         incremental = self._extend is not None
+        q = self._ssm_q(S) if incremental else None
         cache = (M.empty_extend_cache(self.cfg, B, S, dtype=jnp.float32)
                  if incremental else None)
         while done < S:
-            c = self._next_chunk(S - done)
+            c = self._next_chunk(S - done, q)
             t0 = time.perf_counter()
             if incremental:
                 # feed ONLY the chunk to the growing cache: O(chunk) work
                 logits, cache = self._extend(
                     self.params, jnp.asarray(tokens[:, done: done + c]),
-                    cache, done)
+                    cache, done, q)
             else:
-                # recurrent/encoder families: re-run the prefix
+                # encoder/hybrid families: re-run the prefix — O(n^2),
+                # counted so the fallback can never hide in the logs
+                self.n_prefill_fallbacks += 1
                 chunk = jnp.asarray(tokens[:, : done + c])
                 logits, cache = self._prefill(self.params, {"tokens": chunk})
             dt = time.perf_counter() - t0
@@ -137,8 +165,13 @@ class Engine:
         chunk = min(chunk, st.remaining_prefill)
         if chunk <= 0:
             return
+        q = self._ssm_q(st.prompt_len)
+        if q:
+            # ssm scan-block alignment (`_ssm_q`): round the policy's
+            # chunk up to a multiple of Q, capped at the prompt end
+            chunk = min(-(-chunk // q) * q, st.remaining_prefill)
         toks = jnp.asarray(st.request.tokens[:, done: done + chunk])
-        logits, st.cache = self._extend(self.params, toks, st.cache, done)
+        logits, st.cache = self._extend(self.params, toks, st.cache, done, q)
         st.prefill_done = done + chunk
         st.last_logits = logits
         if st.remaining_prefill == 0:

@@ -194,6 +194,7 @@ class ServeMetrics:
         self.n_degraded = 0           # deadline hit: partial output returned
         self.n_tokens_out = 0         # goodput numerator
         self.n_tokens_shed = 0        # decode steps shed by degradation
+        self.n_prefill_fallback = 0   # O(n^2) prefix-rerun prefill chunks
         self.t_elapsed = 0.0          # serving-clock seconds (set by run())
         # ---- hardened backend boundary (DESIGN.md §2.11) ----
         self.n_backend_faults = 0     # terminal per-op FaultErrors absorbed
@@ -220,6 +221,7 @@ class ServeMetrics:
             "n_degraded": self.n_degraded,
             "n_tokens_out": self.n_tokens_out,
             "n_tokens_shed": self.n_tokens_shed,
+            "n_prefill_fallback": self.n_prefill_fallback,
             "n_backend_faults": self.n_backend_faults,
             "n_backend_retries": self.n_backend_retries,
             "n_breaker_trips": self.n_breaker_trips,
@@ -230,8 +232,9 @@ class ServeMetrics:
     # ------------------------------------------------- snapshot (DESIGN §2.11)
     _COUNTERS = ("n_arrived", "n_admitted", "n_shed_admission",
                  "n_completed", "n_degraded", "n_tokens_out",
-                 "n_tokens_shed", "t_elapsed", "n_backend_faults",
-                 "n_backend_retries", "n_breaker_trips")
+                 "n_tokens_shed", "n_prefill_fallback", "t_elapsed",
+                 "n_backend_faults", "n_backend_retries",
+                 "n_breaker_trips")
 
     def state_dict(self) -> dict:
         d = {"ttft": self.ttft.state_dict(),

@@ -1,6 +1,8 @@
 """First test coverage for the serving engine (`repro/serve/engine.py`):
 chunked-prefill equivalence, iCh divisor adaptation, `generate` contracts,
-and deadline-based graceful degradation (DESIGN.md §2.9).
+deadline-based graceful degradation (DESIGN.md §2.9), and the ssm
+family's incremental prefill (state-threaded chunks, scan-block aligned,
+bit-identical to one-shot).
 
 Runs on a reduced decoder config (repro.configs.reduced) so the whole
 module is CPU-cheap; the model params are built once per module.
@@ -12,6 +14,8 @@ import pytest
 from repro.configs import get_arch, reduced
 from repro.models import model as M
 from repro.serve.engine import Engine, EngineConfig
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import Request, RequestState
 
 ECFG = dict(max_seq=64, min_chunk=4)
 
@@ -190,3 +194,120 @@ class TestGenerate:
             .generate(toks, n_new=6, deadline_s=0.0)
         assert stats["degraded"] is True
         np.testing.assert_array_equal(part, full[:, :part.shape[1]])
+
+
+# ------------------------------------------------ ssm incremental prefill
+
+@pytest.fixture(scope="module")
+def ssm_model():
+    cfg = reduced(get_arch("xlstm-350m"), block_pattern=("X", "S"),
+                  ssm_chunk=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(1), max_seq=64)
+    return cfg, params
+
+
+@pytest.fixture()
+def ssm_engine(ssm_model):
+    cfg, params = ssm_model
+    return Engine(cfg, params, EngineConfig(**ECFG))
+
+
+def assert_trees_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+class TestSSMIncrementalPrefill:
+    """The ssm family extends chunk to chunk through its O(1) recurrent
+    block states (mLSTM matrix, sLSTM h/c) instead of re-running the
+    prefix: O(chunk) per chunk, bit-identical to a one-shot prefill as
+    long as chunk boundaries align to the scan-block quantum Q."""
+
+    def test_family_supported(self, ssm_model):
+        cfg, _ = ssm_model
+        assert M.extend_cache_specs_ok(cfg)
+
+    def test_hybrid_still_falls_back(self):
+        assert not M.extend_cache_specs_ok(reduced(get_arch("zamba2-1.2b")))
+
+    def test_matches_one_shot_bit_identical(self, ssm_model, ssm_engine):
+        """Logits AND final recurrent states must equal a one-shot
+        prefill bit-for-bit, including a final PARTIAL chunk (S=22 is not
+        a multiple of Q=4, so the last chunk pads exactly like the
+        one-shot scan pads its tail block)."""
+        cfg, params = ssm_model
+        toks = prompts_for(cfg, B=2, S=22)
+        logits, cache, log = ssm_engine.prefill_chunked(toks)
+        ref, ref_cache = ssm_engine._prefill(params,
+                                             {"tokens": np.asarray(toks)})
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+        assert_trees_equal(cache, ref_cache)
+        assert len(log) > 1            # really chunked
+        assert ssm_engine.n_prefill_fallbacks == 0
+
+    def test_chunks_align_to_scan_quantum(self, ssm_model, ssm_engine):
+        cfg, _ = ssm_model
+        _, _, log = ssm_engine.prefill_chunked(prompts_for(cfg, B=1, S=22))
+        chunks = [rec["chunk"] for rec in log]
+        assert sum(chunks) == 22
+        assert all(c % 4 == 0 for c in chunks[:-1])  # only the tail is partial
+
+    def test_outputs_independent_of_chunk_count(self, ssm_model):
+        cfg, params = ssm_model
+        toks = prompts_for(cfg, B=2, S=24)
+        logits, counts = [], []
+        for d0 in (1.0, 3.0, 8.0):
+            eng = Engine(cfg, params,
+                         EngineConfig(max_seq=64, min_chunk=2,
+                                      init_divisor=d0))
+            lg, _, log = eng.prefill_chunked(toks)
+            logits.append(np.asarray(lg))
+            counts.append(len(log))
+        assert len(set(counts)) > 1  # the splits really differed
+        for lg in logits[1:]:
+            np.testing.assert_array_equal(lg, logits[0])
+
+    def test_generate_deterministic_across_divisors(self, ssm_model):
+        """Identical prefill states mean identical decode streams no
+        matter how the prompt was chunked."""
+        cfg, params = ssm_model
+        toks = prompts_for(cfg, B=2, S=20)
+        outs = [Engine(cfg, params,
+                       EngineConfig(max_seq=64, min_chunk=4,
+                                    init_divisor=d0))
+                .generate(toks, n_new=4)[0] for d0 in (1.0, 8.0)]
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_request_chunk_step_quantizes_and_matches(self, ssm_model,
+                                                      ssm_engine):
+        """The batcher primitive rounds the policy's chunk up to a
+        multiple of Q and the completed prefill's first token equals the
+        one-shot argmax."""
+        cfg, params = ssm_model
+        toks = prompts_for(cfg, B=1, S=10)
+        st = RequestState(request=Request(req_id=0, tokens=toks, n_new=1))
+        ssm_engine.prefill_chunk_step(st, 5)    # -> rounded up to 8
+        assert st.prefill_done == 8
+        ssm_engine.prefill_chunk_step(st, 1)    # -> final partial chunk (2)
+        assert st.prefill_done == 10
+        ref, _ = ssm_engine._prefill(params, {"tokens": np.asarray(toks)})
+        assert st.out_tokens == [int(np.argmax(np.asarray(ref)[0]))]
+
+
+class TestPrefillFallbackVisibility:
+    def test_fallback_chunks_counted(self):
+        """hybrid (zamba2) still re-runs the prefix per chunk — every
+        such chunk must land in the loud counter."""
+        cfg = reduced(get_arch("zamba2-1.2b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(2), max_seq=64)
+        eng = Engine(cfg, params, EngineConfig(**ECFG))
+        _, _, log = eng.prefill_chunked(prompts_for(cfg, B=1, S=12))
+        assert eng.n_prefill_fallbacks == len(log) > 1
+
+    def test_metrics_counter_wired(self):
+        m = ServeMetrics()
+        assert m.n_prefill_fallback == 0
+        assert "n_prefill_fallback" in m.summary()
+        m.n_prefill_fallback = 3
+        assert ServeMetrics.from_state(m.state_dict()) \
+            .n_prefill_fallback == 3
